@@ -1,0 +1,44 @@
+"""Paper Figures 1 & 3: toy-CNN strategy runtimes vs channel rate and
+depth, kernel 3 vs 5.  The paper's qualitative claims: crb gains on multi
+as channel rate grows (shallow nets) and as kernel size grows; multi gains
+with depth."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import DPConfig
+from repro.core.clipping import dp_gradient
+from repro.models.cnn import toy_cnn_config
+from repro.models.registry import build_model
+
+IMG, B, C0 = 64, 8, 8
+
+
+def run():
+    rng = np.random.RandomState(0)
+    for kernel in (3, 5):
+        for n_layers in (2, 3, 4):
+            for rate in (1.0, 1.5, 2.0):
+                cfg = toy_cnn_config(n_layers, rate, c0=C0, kernel=kernel,
+                                     img=IMG)
+                model = build_model(cfg)
+                params, _ = model.init(jax.random.PRNGKey(0))
+                batch = {"img": jnp.array(rng.randn(B, 3, IMG, IMG),
+                                          jnp.float32),
+                         "label": jnp.array(rng.randint(0, 10, (B,)))}
+                ts = {}
+                for s in ("multi", "crb"):
+                    f = jax.jit(lambda p, b, _s=DPConfig(l2_clip=1.0,
+                                                         strategy=s):
+                                dp_gradient(model.apply, p, b, cfg=_s)[0])
+                    ts[s] = time_fn(f, params, batch)
+                name = f"fig1_3/k{kernel}_L{n_layers}_r{rate}"
+                emit(name, ts["crb"],
+                     f"crb/multi={ts['crb'] / ts['multi']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

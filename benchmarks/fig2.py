@@ -1,0 +1,38 @@
+"""Paper Figure 2: runtime vs batch size per strategy (toy CNN, kernel 5,
+3 layers, wide first layer).  Claim: naive/multi scale linearly in B; crb
+flattens (sub-linear slope) at larger batches."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import DPConfig
+from repro.core.clipping import dp_gradient
+from repro.models.cnn import toy_cnn_config
+from repro.models.registry import build_model
+
+IMG = 48
+
+
+def run():
+    rng = np.random.RandomState(0)
+    cfg = toy_cnn_config(3, 1.0, c0=32, kernel=5, img=IMG)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    prev = {}
+    for B in (2, 4, 8, 16):
+        batch = {"img": jnp.array(rng.randn(B, 3, IMG, IMG), jnp.float32),
+                 "label": jnp.array(rng.randint(0, 10, (B,)))}
+        for s in ("naive", "multi", "crb"):
+            f = jax.jit(lambda p, b, _s=DPConfig(l2_clip=1.0, strategy=s):
+                        dp_gradient(model.apply, p, b, cfg=_s)[0])
+            t = time_fn(f, params, batch)
+            slope = f"slope_vs_halfB={t / prev[s]:.2f}" if s in prev else ""
+            emit(f"fig2/B{B}/{s}", t, slope)
+            prev[s] = t
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Beyond-paper: DP per-example-gradient overhead on LM architectures
+(reduced configs, CPU wall time + compiled FLOPs).  The production
+question: what does ghost/bk DP cost over non-private training?"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_config
+from repro.core import DPConfig
+from repro.core.clipping import dp_gradient, non_dp_gradient
+from repro.models.registry import build_model
+
+ARCHS = ["llama3.2-1b", "granite-moe-1b-a400m", "xlstm-125m"]
+B, T = 4, 32
+
+
+def run():
+    rng = np.random.RandomState(0)
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.array(rng.randint(0, cfg.vocab, (B, T))),
+                 "labels": jnp.array(rng.randint(0, cfg.vocab, (B, T)))}
+
+        nodp = jax.jit(lambda p, b: non_dp_gradient(model.apply, p, b)[0])
+        t0 = time_fn(nodp, params, batch)
+        emit(f"lm_overhead/{arch}/no_dp", t0, "baseline")
+        for s in ("multi", "ghost", "bk"):
+            f = jax.jit(lambda p, b, _s=DPConfig(l2_clip=1.0, strategy=s):
+                        dp_gradient(model.apply, p, b, cfg=_s)[0])
+            t = time_fn(f, params, batch)
+            # compiled per-call FLOPs for the analytic comparison
+            try:
+                fl = jax.jit(
+                    lambda p, b, _s=DPConfig(l2_clip=1.0, strategy=s):
+                    dp_gradient(model.apply, p, b, cfg=_s)[0]
+                ).lower(params, batch).compile().cost_analysis().get("flops")
+            except Exception:
+                fl = None
+            emit(f"lm_overhead/{arch}/{s}", t,
+                 f"x{t / t0:.2f}_vs_no_dp;flops={fl}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,166 @@
+"""Roofline analysis from the dry-run's compiled artifacts.
+
+Per (arch × shape × mesh) cell, three per-chip time terms on TPU v5e:
+
+    compute    = HLO_FLOPs_per_device / 197e12        [bf16 MXU peak]
+    memory     = HLO_bytes_per_device / 819e9         [HBM bandwidth]
+    collective = collective_bytes_per_device / 50e9   [ICI per link]
+
+plus MODEL_FLOPS = 6·N·D (train; 2·N·D for serving) with N = active
+params, the useful-compute ratio MODEL_FLOPS / (chips · HLO_FLOPs), and
+the roofline fraction  (MODEL_FLOPS/chips/peak) / max(terms)  — the score
+this framework optimizes in EXPERIMENTS.md §Perf.
+
+``cost_analysis()`` numbers are per-device (verified: doubling the mesh
+halves them); collective bytes come from the post-SPMD HLO with
+while-loop trip multipliers (see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+CHIPS = {"single": 256, "multi": 512}
+
+
+def count_params(cfg):
+    """(total, active) parameter counts from the abstract init."""
+    import jax
+    from repro.models.registry import build_model
+
+    model = build_model(cfg)
+    box = []
+
+    def only(k):
+        p, axes = model.init(k)
+        box.append(None)
+        return p
+
+    sds = jax.eval_shape(only, jax.random.PRNGKey(0))
+    total = active = 0
+    for kp, leaf in jax.tree_util.tree_leaves_with_path(sds):
+        n = int(np.prod(leaf.shape))
+        total += n
+        path = jax.tree_util.keystr(kp)
+        if ("moe" in path and cfg.n_experts
+                and leaf.shape and cfg.n_experts in leaf.shape[:2]
+                and "router" not in path and "shared" not in path):
+            active += n * cfg.topk // cfg.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def analyse(record: dict, cfg, n_total: int, n_active: int) -> dict:
+    from repro.configs.base import SHAPES
+    shape = SHAPES[record["shape"]]
+    chips = CHIPS[record["mesh"]]
+    # parsed HLO costs carry while-loop trip multipliers (layer scans);
+    # XLA's cost_analysis counts loop bodies once, so prefer the parse.
+    fl = record.get("flops_parsed") or record.get("flops_per_device") or 0.0
+    by = record.get("bytes_parsed") or record.get("bytes_per_device") or 0.0
+    co = (record.get("collectives") or {}).get("total_bytes", 0)
+
+    t_compute = fl / PEAK_FLOPS
+    t_memory = by / HBM_BW
+    t_coll = co / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        model_flops = 2.0 * n_active * tokens
+
+    useful = model_flops / (chips * fl) if fl else 0.0
+    t_model = model_flops / chips / PEAK_FLOPS
+    dominant = max(terms.values()) or 1e-30
+    fraction = t_model / dominant
+
+    return {
+        **{f"t_{k}_s": v for k, v in terms.items()},
+        "bottleneck": bottleneck,
+        "model_flops": model_flops,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": fraction,
+        "chips": chips,
+    }
+
+
+def improvement_hint(rec: dict, out: dict) -> str:
+    b = out["bottleneck"]
+    if b == "compute":
+        if out["useful_flops_ratio"] < 0.5:
+            return ("compute-bound with low useful-FLOP ratio: cut remat/"
+                    "dispatch overhead (gather MoE dispatch, bk instead of "
+                    "ghost second backward)")
+        return "compute-bound near useful peak: only algorithmic wins left"
+    if b == "memory":
+        return ("memory-bound: fuse the Gram-norm reduction (Pallas "
+                "gram_norm keeps (T,T) tiles in VMEM), larger microbatch, "
+                "flash attention for long sequences")
+    return ("collective-bound: reshard so ghost-norm contractions stay "
+            "local to the TP axis, overlap grad all-reduce with backward, "
+            "bf16 collectives")
+
+
+def run(dryrun_path: str | None = None,
+        out_path: str = "results/roofline.json"):
+    from benchmarks.common import emit
+    from repro.configs import get_config
+
+    if dryrun_path is None:
+        for cand in ("results/dryrun_optimized.json",
+                     "results/dryrun_baseline.json", "results/dryrun.json"):
+            if os.path.exists(cand):
+                dryrun_path = cand
+                break
+        else:
+            print("# roofline: no dryrun json found — run "
+                  "`python -m repro.launch.dryrun` first")
+            return
+        print(f"# roofline source: {dryrun_path}")
+    if not os.path.exists(dryrun_path):
+        print(f"# roofline: {dryrun_path} missing — run "
+              f"`python -m repro.launch.dryrun` first")
+        return
+    records = [r for r in json.load(open(dryrun_path))
+               if r.get("status") == "ok"]
+    params_cache = {}
+    out = []
+    for rec in sorted(records, key=lambda r: (r["arch"], r["shape"],
+                                              r["mesh"])):
+        cfg = get_config(rec["arch"])
+        if rec["arch"] not in params_cache:
+            params_cache[rec["arch"]] = count_params(cfg)
+        n_total, n_active = params_cache[rec["arch"]]
+        res = analyse(rec, cfg, n_total, n_active)
+        res.update(arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+                   n_total=n_total, n_active=n_active,
+                   hint=improvement_hint(rec, res))
+        out.append(res)
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        dom = max(res["t_compute_s"], res["t_memory_s"],
+                  res["t_collective_s"])
+        emit(name, dom * 1e6,
+             f"bottleneck={res['bottleneck']};"
+             f"frac={res['roofline_fraction']:.3f};"
+             f"useful={res['useful_flops_ratio']:.3f}")
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    run()

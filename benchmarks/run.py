@@ -1,0 +1,26 @@
+"""Benchmark harness — one module per paper table/figure plus the
+beyond-paper LM/kernel/roofline analyses.
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import fig1_3, fig2, kernels_bench, lm_overhead, \
+        roofline, table1
+    for mod in (table1, fig1_3, fig2, lm_overhead, kernels_bench, roofline):
+        print(f"# --- {mod.__name__} ---", flush=True)
+        try:
+            mod.run()
+        except Exception:
+            traceback.print_exc()
+            print(f"# {mod.__name__} FAILED", flush=True)
+
+
+if __name__ == "__main__":
+    main()

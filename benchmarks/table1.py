@@ -1,0 +1,48 @@
+"""Paper Table 1: AlexNet / VGG16 runtimes per strategy.
+
+CPU-scaled reproduction: 20 batches at the paper's batch sizes are
+infeasible on one CPU core at 3x256x256, so we run reduced image sizes and
+report *ratios between strategies* — the paper's claims are ratio claims
+(crb ~15x faster than naive on AlexNet; multi ~ crb within 2x on VGG16).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_config
+from repro.core import DPConfig
+from repro.core.clipping import dp_gradient, non_dp_gradient
+from repro.models.registry import build_model
+
+SETTINGS = {  # arch -> (img, batch, strategies)
+    "alexnet": (96, 8, ("naive", "multi", "crb", "ghost", "bk")),
+    "vgg16": (64, 4, ("multi", "crb", "ghost", "bk")),  # naive too slow
+}
+
+
+def run():
+    rng = np.random.RandomState(0)
+    for arch, (img, B, strategies) in SETTINGS.items():
+        cfg = get_config(arch).replace(img_size=img, n_classes=100)
+        model = build_model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        batch = {"img": jnp.array(rng.randn(B, 3, img, img), jnp.float32),
+                 "label": jnp.array(rng.randint(0, 100, (B,)))}
+
+        nodp = jax.jit(lambda p, b: non_dp_gradient(model.apply, p, b)[0])
+        t0 = time_fn(nodp, params, batch)
+        emit(f"table1/{arch}/no_dp", t0, "baseline")
+
+        for s in strategies:
+            dpc = DPConfig(l2_clip=1.0, strategy=s)
+            f = jax.jit(lambda p, b, _s=dpc: dp_gradient(
+                model.apply, p, b, cfg=_s)[0])
+            t = time_fn(f, params, batch)
+            emit(f"table1/{arch}/{s}", t, f"x{t / t0:.2f}_vs_no_dp")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,23 @@
+"""Batched LM serving example: prefill + KV-cache decode over a request
+queue (the laptop twin of the decode_32k dry-run cells).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch glm4-9b
+"""
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--n-requests", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+    serve_mod.main(["--arch", args.arch, "--n-requests",
+                    str(args.n_requests), "--batch", "4",
+                    "--prompt-len", "16", "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""repro: per-example gradients (Rochette, Manoel & Tramel 2019) as a
+pod-scale JAX differential-privacy training framework.
+
+Public surface:
+  repro.core       — PEG strategies (naive/multi/crb/ghost/bk), DP-SGD,
+                     RDP privacy accounting
+  repro.models     — taps-enabled model zoo (LMs, MoE, SSM, enc-dec, CNNs)
+  repro.kernels    — Pallas TPU kernels (+ refs)
+  repro.configs    — assigned architecture configs
+  repro.launch     — production mesh, sharding rules, dry-run, train, serve
+"""
+__version__ = "1.0.0"
+
+from repro.core import (DPConfig, PrivacyAccountant, Tapper, clipped_grad_sum,
+                        dp_gradient, ghost_norms, per_example_grads)
+
+__all__ = ["DPConfig", "PrivacyAccountant", "Tapper", "clipped_grad_sum",
+           "dp_gradient", "ghost_norms", "per_example_grads", "__version__"]

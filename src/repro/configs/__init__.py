@@ -1,0 +1,46 @@
+"""Assigned architecture configs (+ the paper's own CNNs).
+
+Every entry is selectable via ``--arch <id>`` in the launchers.
+"""
+from __future__ import annotations
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+
+
+def _get(name: str) -> ModelConfig:
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{name.replace('-', '_').replace('.', '_')}")
+    return mod.CONFIG
+
+
+ARCH_IDS = [
+    "olmo-1b", "stablelm-12b", "glm4-9b", "llama3.2-1b", "xlstm-125m",
+    "seamless-m4t-large-v2", "zamba2-2.7b", "chameleon-34b",
+    "granite-moe-1b-a400m", "deepseek-v3-671b",
+]
+PAPER_IDS = ["alexnet", "vgg16"]
+
+_MOD = {
+    "olmo-1b": "olmo_1b", "stablelm-12b": "stablelm_12b",
+    "glm4-9b": "glm4_9b", "llama3.2-1b": "llama32_1b",
+    "xlstm-125m": "xlstm_125m",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "zamba2-2.7b": "zamba2_2p7b", "chameleon-34b": "chameleon_34b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "alexnet": "alexnet", "vgg16": "vgg16",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{_MOD[arch]}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS + PAPER_IDS}
+
+
+__all__ = ["ARCH_IDS", "PAPER_IDS", "SHAPES", "ModelConfig", "ShapeSpec",
+           "get_config", "all_configs"]

@@ -1,0 +1,21 @@
+"""The paper's primary contribution: per-example gradient computation
+(naive / multi / crb of Rochette et al. 2019, plus ghost & book-keeping
+extensions) and the DP-SGD machinery built on it."""
+from repro.core.clipping import DPConfig, add_noise, dp_gradient, non_dp_gradient
+from repro.core.privacy import PrivacyAccountant, rdp_subsampled_gaussian
+from repro.core.strategies import (STRATEGIES, check_coverage,
+                                   clip_coefficients, clipped_grad_sum,
+                                   crb_per_example_grads, ghost_norms,
+                                   multi_per_example_grads,
+                                   naive_per_example_grads, per_example_grads)
+from repro.core.tapper import (LayerMeta, Tapper, capture_backward, probe,
+                               scan_with_taps)
+
+__all__ = [
+    "DPConfig", "add_noise", "dp_gradient", "non_dp_gradient",
+    "PrivacyAccountant", "rdp_subsampled_gaussian", "STRATEGIES",
+    "check_coverage", "clip_coefficients", "clipped_grad_sum",
+    "crb_per_example_grads", "ghost_norms", "multi_per_example_grads",
+    "naive_per_example_grads", "per_example_grads", "LayerMeta", "Tapper",
+    "capture_backward", "probe", "scan_with_taps",
+]

@@ -1,0 +1,44 @@
+"""Analytic dispatch between ghost-norm realizations.
+
+The paper's empirical finding is that which per-example-gradient strategy
+wins depends on layer geometry (depth, width, batch, kernel size).  Here
+that observation becomes an analytic per-layer choice between:
+
+  * ``gram``   — Gram-trick norm, FLOPs ≈ 2·B·T²·(Din+Dout), no per-example
+                 gradient materialization (peak extra memory B·chunk·T);
+  * ``stream`` — materialize per-example grads then reduce,
+                 FLOPs ≈ 4·B·T·Din·Dout, peak extra memory B·Din·Dout;
+  * ``rank1``  — no sequence axis: ‖g_b‖² = ‖x_b‖²·‖δy_b‖² exactly.
+
+Defaults target TPU v5e; the memory budget guards HBM blow-ups on the
+stream path (the Gram path is always chunk-bounded).
+"""
+from __future__ import annotations
+
+GRAM_CHUNK = 1024
+STREAM_MEM_BUDGET = 2 << 30  # bytes of per-example-grad scratch we tolerate
+BYTES = 4
+
+
+def dense_norm_method(T: int, Di: int, Do: int, B: int,
+                      mem_budget: int = STREAM_MEM_BUDGET) -> str:
+    if T == 1:
+        return "rank1"
+    gram_flops = 2 * T * T * (Di + Do)
+    stream_flops = 4 * T * Di * Do
+    stream_mem = B * Di * Do * BYTES
+    if stream_flops < gram_flops and stream_mem <= mem_budget:
+        return "stream"
+    return "gram"
+
+
+def seg_norm_method(S: int, Di: int, Do: int, B: int, G: int,
+                    mem_budget: int = STREAM_MEM_BUDGET) -> str:
+    """MoE expert slots: gram is O(G·S²·(Di+Do+B)), stream is
+    O(G·B·Di·Do) FLOPs with (B·Di·Do) scratch per expert-group step."""
+    gram_flops = G * S * S * (Di + Do + B)
+    stream_flops = G * B * Di * Do
+    stream_mem = B * Di * Do * BYTES
+    if stream_flops < gram_flops and stream_mem <= mem_budget:
+        return "stream"
+    return "gram"

@@ -1,0 +1,555 @@
+"""Per-layer-kind gradient algebra.
+
+Given a layer's captured input ``x_b`` and output cotangent ``δy_b`` (from
+:mod:`repro.core.tapper`), each *kind* knows three operations:
+
+  * ``pe_grad``  — materialize per-example gradients (B, *param)  [crb]
+  * ``norm_sq``  — per-example squared grad norms (B,) without
+                   materialization where structure allows               [ghost]
+  * ``contrib``  — weighted sum Σ_b w_b g_b at parameter shape          [bk]
+
+For a dense layer with a sequence axis the ghost norm uses the Gram
+identity  ``‖g_b‖² = Σ_{t,t'} (x_t·x_{t'}) (δy_t·δy_{t'})``  which costs
+``T²(Din+Dout)`` instead of materializing ``T·Din·Dout`` — the analytic
+generalization of the paper's empirical crb-vs-multi crossover.  The
+choice between the two is made by :mod:`repro.core.costmodel`.
+
+All reductions accumulate in float32 regardless of capture dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel
+from repro.core.tapper import LayerMeta
+
+F32 = jnp.float32
+
+
+def _ee(*args, **kw):
+    """einsum with fp32 accumulation."""
+    return jnp.einsum(*args, preferred_element_type=F32, **kw)
+
+
+def _sumsq(tree):
+    """Σ leaf² per example: every leaf has leading B."""
+    leaves = jax.tree.leaves(tree)
+    tot = 0.0
+    for leaf in leaves:
+        tot = tot + jnp.sum(
+            jnp.square(leaf.astype(F32)),
+            axis=tuple(range(1, leaf.ndim)))
+    return tot
+
+
+def _flatten_seq(x):
+    """(B, *S, D) -> (B, T, D) with T = prod(S) (possibly 1)."""
+    B, D = x.shape[0], x.shape[-1]
+    return x.reshape(B, -1, D)
+
+
+# ---------------------------------------------------------------------------
+# Dense (batched)
+
+
+def dense_pe_grad(meta: LayerMeta, cap, dy):
+    x, g = _flatten_seq(cap["x"]), _flatten_seq(dy)
+    if meta.w_transposed:
+        w_grad = _ee("bto,bti->boi", g, x)
+    else:
+        w_grad = _ee("bti,bto->bio", x, g)
+    out = {meta.param_key: w_grad}
+    if meta.bias_key:
+        out[meta.bias_key] = _ee("bto->bo", g)
+    return out
+
+
+def dense_norm_sq(meta: LayerMeta, cap, dy, method: str = "auto"):
+    x, g = _flatten_seq(cap["x"]), _flatten_seq(dy)
+    B, T, Di = x.shape
+    Do = g.shape[-1]
+    if method == "auto":
+        method = costmodel.dense_norm_method(T, Di, Do, B)
+    if method == "rank1" and T != 1:
+        method = "gram"
+    if method == "pallas":
+        # VMEM-tiled Gram kernel (TPU; interpret elsewhere) — the (T,T)
+        # tiles never touch HBM.
+        from repro.kernels import ops as kops
+        return kops.gram_norm(x, g, has_bias=bool(meta.bias_key))
+    if method == "rank1":
+        n = _ee("bti,bti->b", x, x) * _ee("bto,bto->b", g, g)
+        if meta.bias_key:
+            n = n + _ee("bto,bto->b", g, g)
+        return n
+    if method == "stream":
+        pe = dense_pe_grad(meta, cap, dy)
+        return _sumsq(pe)
+    # gram, chunked over rows to bound the (B, T, T) intermediate
+    chunk = costmodel.GRAM_CHUNK
+    need_bias = bool(meta.bias_key)
+
+    def chunk_norm(xc, gc):
+        sx = _ee("bci,bti->bct", xc, x)
+        sy = _ee("bco,bto->bct", gc, g)
+        n = _ee("bct,bct->b", sx, sy)
+        if need_bias:
+            n = n + jnp.sum(sy, axis=(1, 2))
+        return n
+
+    if T <= chunk:
+        return chunk_norm(x, g)
+    n_chunks, rem = divmod(T, chunk)
+    xs = x[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, Di)
+    gs = g[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, Do)
+
+    def body(acc, xg):
+        xc, gc = xg
+        return acc + chunk_norm(xc, gc), None
+
+    n, _ = jax.lax.scan(body, jnp.zeros((B,), F32),
+                        (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(gs, 1, 0)))
+    if rem:
+        n = n + chunk_norm(x[:, n_chunks * chunk:], g[:, n_chunks * chunk:])
+    return n
+
+
+def dense_contrib(meta: LayerMeta, cap, dy, w):
+    x, g = _flatten_seq(cap["x"]), _flatten_seq(dy)
+    if meta.w_transposed:
+        w_grad = _ee("b,bto,bti->oi", w, g, x)
+    else:
+        w_grad = _ee("b,bti,bto->io", w, x, g)
+    out = {meta.param_key: w_grad}
+    if meta.bias_key:
+        out[meta.bias_key] = _ee("b,bto->o", w, g)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dense (segmented: MoE expert slots with explicit example ids)
+
+
+def _seg_flatten(meta, cap, dy):
+    """Returns x (G,S,Di), g (G,S,Do), seg (G,S), n_examples B."""
+    x, g, seg = cap["x"], dy, cap["seg"]
+    Di, Do, S = x.shape[-1], g.shape[-1], x.shape[-2]
+    x = x.reshape(-1, S, Di)
+    g = g.reshape(-1, S, Do)
+    seg = seg.reshape(-1, S)
+    return x, g, seg, meta.static["n_examples"]
+
+
+def seg_dense_pe_grad(meta: LayerMeta, cap, dy):
+    x, g, seg, B = _seg_flatten(meta, cap, dy)
+    oh = jax.nn.one_hot(seg, B, dtype=x.dtype)                 # (G,S,B)
+    w_grad = _ee("gsb,gsi,gso->bgio", oh, x, g)
+    w_grad = w_grad.reshape((B,) + cap["x"].shape[:-2] + w_grad.shape[-2:])
+    out = {meta.param_key: w_grad}
+    if meta.bias_key:
+        bg = _ee("gsb,gso->bgo", oh, g)
+        out[meta.bias_key] = bg.reshape((B,) + cap["x"].shape[:-2] + bg.shape[-1:])
+    return out
+
+
+def seg_dense_norm_sq(meta: LayerMeta, cap, dy, method: str = "auto"):
+    x, g, seg, B = _seg_flatten(meta, cap, dy)
+    G, S, Di = x.shape
+    Do = g.shape[-1]
+    if method == "auto":
+        method = costmodel.seg_norm_method(S, Di, Do, B, G)
+    # Both methods scan over the group (expert) axis so peak extra memory
+    # is one group's worth: (B,Di,Do) for stream, (S,S) for gram.
+    if method == "stream":
+        def body(acc, xgs):
+            xg, gg, sg = xgs
+            oh = jax.nn.one_hot(sg, B, dtype=xg.dtype)          # (S,B)
+            pe = _ee("sb,si,so->bio", oh, xg, gg)
+            acc = acc + jnp.sum(jnp.square(pe), axis=(1, 2))
+            if meta.bias_key:
+                peb = _ee("sb,so->bo", oh, gg)
+                acc = acc + jnp.sum(jnp.square(peb), axis=1)
+            return acc, None
+    else:  # gram over slots with same-example masking
+        def body(acc, xgs):
+            xg, gg, sg = xgs
+            p = _ee("si,ti->st", xg, xg) * _ee("so,to->st", gg, gg)
+            if meta.bias_key:
+                p = p + _ee("so,to->st", gg, gg)
+            oh = jax.nn.one_hot(sg, B, dtype=F32)               # (S,B)
+            acc = acc + _ee("sb,st,tb->b", oh, p, oh)
+            return acc, None
+
+    n, _ = jax.lax.scan(body, jnp.zeros((B,), F32), (x, g, seg))
+    return n
+
+
+def seg_dense_contrib(meta: LayerMeta, cap, dy, w):
+    x, g, seg, B = _seg_flatten(meta, cap, dy)
+    ws = w[seg]                                                 # (G,S)
+    w_grad = _ee("gs,gsi,gso->gio", ws, x, g)
+    w_grad = w_grad.reshape(cap["x"].shape[:-2] + w_grad.shape[-2:])
+    out = {meta.param_key: w_grad}
+    if meta.bias_key:
+        bg = _ee("gs,gso->go", ws, g)
+        out[meta.bias_key] = bg.reshape(cap["x"].shape[:-2] + bg.shape[-1:])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Embedding (gather)
+
+
+def embed_pe_grad(meta: LayerMeta, cap, dy, vocab: int):
+    ids, g = cap["ids"], dy
+    B = ids.shape[0]
+    ids2 = ids.reshape(B, -1)
+    g2 = g.reshape(B, ids2.shape[1], -1).astype(F32)
+    out = jnp.zeros((B, vocab, g2.shape[-1]), F32)
+    bidx = jnp.arange(B)[:, None]
+    out = out.at[bidx, ids2].add(g2)
+    return {meta.param_key: out}
+
+
+def embed_norm_sq(meta: LayerMeta, cap, dy, method: str = "segsum"):
+    """Embedding-gather ghost norm: ‖g_b‖² = Σ_v ‖Σ_{t: id_t=v} δy_t‖².
+
+    ``segsum`` (default): sort tokens, segment-sum cotangent rows, square —
+    O(T·logT + T·D).  ``gram``: same-token-masked T×T Gram — O(T²·D); at
+    T=4096 the gram costs ~2.4× the *whole model's* training FLOPs, which
+    the dry-run FLOP parser exposed (EXPERIMENTS.md §Perf iteration 1).
+    """
+    ids, g = cap["ids"], dy
+    B = ids.shape[0]
+    ids2 = ids.reshape(B, -1)
+    T = ids2.shape[1]
+    g2 = g.reshape(B, T, -1)
+    if method == "gram":
+        sy = _ee("btd,bsd->bts", g2, g2)
+        m = (ids2[:, :, None] == ids2[:, None, :]).astype(F32)
+        return _ee("bts,bts->b", m, sy)
+    # segsum
+    order = jnp.argsort(ids2, axis=1)
+    ids_s = jnp.take_along_axis(ids2, order, axis=1)
+    g_s = jnp.take_along_axis(g2, order[..., None], axis=1).astype(F32)
+    newseg = jnp.cumsum(
+        jnp.concatenate([jnp.zeros((B, 1), jnp.int32),
+                         (ids_s[:, 1:] != ids_s[:, :-1]).astype(jnp.int32)],
+                        axis=1), axis=1)
+    summed = jax.vmap(
+        lambda gg, ss: jax.ops.segment_sum(gg, ss, num_segments=T))(
+        g_s, newseg)
+    return jnp.sum(jnp.square(summed), axis=(1, 2))
+
+
+def embed_contrib(meta: LayerMeta, cap, dy, w, vocab: int):
+    ids, g = cap["ids"], dy
+    B = ids.shape[0]
+    ids2 = ids.reshape(B, -1)
+    g2 = g.reshape(B, ids2.shape[1], -1).astype(F32)
+    g2 = g2 * w[:, None, None]
+    out = jnp.zeros((vocab, g2.shape[-1]), F32)
+    out = out.at[ids2.reshape(-1)].add(g2.reshape(-1, g2.shape[-1]))
+    return {meta.param_key: out}
+
+
+# ---------------------------------------------------------------------------
+# Scale / bias (elementwise affine)
+
+
+def _scale_reduce_axes(x, gshape):
+    """Axes of x (beyond batch) over which the g-broadcast reduces."""
+    nd, ng = x.ndim, len(gshape)
+    axes = []
+    for ax in range(1, nd):
+        gax = ax - (nd - ng)
+        if gax < 0 or gshape[gax] == 1:
+            axes.append(ax)
+    return tuple(axes)
+
+
+def scale_pe_grad(meta: LayerMeta, cap, dy, gshape):
+    x, g = cap["x"], dy
+    axes = _scale_reduce_axes(x, gshape)
+    pg = jnp.sum((x * g).astype(F32), axis=axes)
+    out = {meta.param_key: pg.reshape((x.shape[0],) + tuple(gshape))}
+    if meta.bias_key:
+        pb = jnp.sum(g.astype(F32), axis=axes)
+        out[meta.bias_key] = pb.reshape((x.shape[0],) + tuple(gshape))
+    return out
+
+
+def scale_norm_sq(meta: LayerMeta, cap, dy, gshape):
+    return _sumsq(scale_pe_grad(meta, cap, dy, gshape))
+
+
+def scale_contrib(meta: LayerMeta, cap, dy, w, gshape):
+    pe = scale_pe_grad(meta, cap, dy, gshape)
+    wb = w.reshape((-1,) + (1,) * len(gshape))
+    return {k: jnp.sum(v * wb, axis=0) for k, v in pe.items()}
+
+
+# ---------------------------------------------------------------------------
+# Convolution (the paper's contribution — Algorithms 1 & 2)
+
+
+def conv_pe_grad(meta: LayerMeta, cap, dy, impl: str = "fgc"):
+    from repro.models import convops
+    st = meta.static
+    w_grad = convops.pe_conv_grad(
+        cap["x"], dy, kernel_spatial=st["kernel_shape"][2:],
+        stride=st["stride"], dilation=st["dilation"], padding=st["padding"],
+        groups=st["groups"], impl=impl)
+    out = {meta.param_key: w_grad}
+    if meta.bias_key:
+        g = dy
+        out[meta.bias_key] = jnp.sum(
+            g.astype(F32), axis=tuple(range(2, g.ndim)))
+    return out
+
+
+def conv_norm_sq(meta: LayerMeta, cap, dy, impl: str = "fgc"):
+    return _sumsq(conv_pe_grad(meta, cap, dy, impl=impl))
+
+
+def conv_contrib(meta: LayerMeta, cap, dy, w):
+    from repro.models.convops import conv_forward
+    st = meta.static
+    x = cap["x"] * w.reshape((-1,) + (1,) * (cap["x"].ndim - 1)).astype(cap["x"].dtype)
+    kshape = st["kernel_shape"]
+
+    def f(wk):
+        return conv_forward(x, wk, stride=st["stride"], dilation=st["dilation"],
+                            padding=st["padding"], groups=st["groups"])
+
+    _, vjp = jax.vjp(f, jnp.zeros(kshape, cap["x"].dtype))
+    (w_grad,) = vjp(dy.astype(cap["x"].dtype))
+    out = {meta.param_key: w_grad.astype(F32)}
+    if meta.bias_key:
+        g = dy.astype(F32) * w.reshape((-1,) + (1,) * (dy.ndim - 1))
+        out[meta.bias_key] = jnp.sum(g, axis=(0,) + tuple(range(2, g.ndim)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Generic local-VJP kind (SSM scans, routers, anything else)
+
+
+def _local_vjp_pe(meta: LayerMeta, cap, dy, params_sub):
+    def one(inputs_b, dy_b):
+        def f(p):
+            return meta.fn(p, *jax.tree.map(lambda a: a[None], inputs_b))
+        y, vjp = jax.vjp(f, params_sub)
+        (g,) = vjp(dy_b[None].astype(y.dtype))
+        return g
+    return jax.vmap(one)(cap["inputs"], dy)
+
+
+def local_vjp_pe_grad(meta: LayerMeta, cap, dy, params_sub):
+    return _local_vjp_pe(meta, cap, dy, params_sub)
+
+
+def local_vjp_norm_sq(meta: LayerMeta, cap, dy, params_sub):
+    return _sumsq(_local_vjp_pe(meta, cap, dy, params_sub))
+
+
+def local_vjp_contrib(meta: LayerMeta, cap, dy, w, params_sub):
+    pe = _local_vjp_pe(meta, cap, dy, params_sub)
+    return jax.tree.map(
+        lambda leaf: jnp.einsum(
+            "b...,b->...", leaf.astype(F32), w.astype(F32)), pe)
+
+
+# ---------------------------------------------------------------------------
+# Stacked-layer handling: fold meta.scanned leading axes
+
+
+def _split_stack(meta: LayerMeta, cap, dy):
+    """Flatten the stacked-layer axes into one leading G axis."""
+    k = meta.scanned
+
+    def flat(a):
+        return a.reshape((-1,) + a.shape[k:])
+
+    stack_shape = dy.shape[:k]
+    return jax.tree.map(flat, cap), flat(dy), stack_shape
+
+
+def _fold_into_seq(meta: LayerMeta, cap, dy):
+    """For shared params: fold stacked axes into the sequence axis so the
+    per-example gradient is summed over applications *before* norms."""
+    k = meta.scanned
+    if k == 0:
+        return cap, dy
+
+    def fold(a):
+        # (S1..Sk, B, *rest, D) -> (B, S*prod(rest_mid), D) handled by
+        # downstream _flatten_seq; here just move stack axes after batch.
+        a = jnp.moveaxis(a.reshape((-1,) + a.shape[k:]), 0, 1)
+        return a
+    return jax.tree.map(fold, cap), jax.tree.map(fold, dy)
+
+
+def apply_kind(op: str, meta: LayerMeta, cap, dy, *, params_sub=None,
+               weights=None, norm_method: str = "auto", conv_impl: str = "fgc",
+               embed_method: str = "segsum"):
+    """Dispatch `op` in {"pe_grad","norm_sq","contrib"} over any kind,
+    handling stacked (scanned) axes and shared parameters."""
+    kind = meta.kind
+
+    if meta.shared and meta.scanned and kind in ("dense", "scale") \
+            and not meta.segmented:
+        # Fold applications into the sequence axis: the per-example gradient
+        # of a shared parameter is the sum over applications, and the fold
+        # makes every op (incl. the Gram norm with its cross terms) exact.
+        cap, dy = _fold_into_seq(meta, cap, dy)
+        return _apply_flat(op, _unscanned(meta), cap, dy,
+                           params_sub=params_sub, weights=weights,
+                           norm_method=norm_method, conv_impl=conv_impl,
+                           embed_method=embed_method)
+
+    if meta.shared and meta.scanned and op == "norm_sq":
+        # Generic shared fallback: materialize the summed per-example grad
+        # (exact cross terms), then take norms.
+        pe = apply_kind("pe_grad", meta, cap, dy, params_sub=params_sub,
+                        conv_impl=conv_impl)
+        return _sumsq(pe)
+
+    if meta.scanned and meta.segmented:
+        # Segmented (MoE) kinds natively reduce over their leading group
+        # axis with a memory-bounded internal scan — just flatten stacks.
+        cap_f, dy_f, stack_shape = _split_stack(meta, cap, dy)
+        res = _apply_flat(op, _unscanned(meta), cap_f, dy_f,
+                          params_sub=params_sub, weights=weights,
+                          norm_method=norm_method, conv_impl=conv_impl,
+                          embed_method=embed_method)
+        if op == "norm_sq":
+            return res
+        if op == "contrib":
+            return jax.tree.map(
+                lambda a: a.reshape(stack_shape + a.shape[1:]), res)
+        return jax.tree.map(  # pe_grad: (B, G, ...) -> (B, *stack, ...)
+            lambda a: a.reshape((a.shape[0],) + stack_shape + a.shape[2:]),
+            res)
+
+    if meta.scanned:
+        cap_f, dy_f, stack_shape = _split_stack(meta, cap, dy)
+        meta_f = _unscanned(meta)
+        psub = params_sub
+        shared_p = psub if (psub is not None and meta.shared) else None
+        if psub is not None and not meta.shared:
+            psub = jax.tree.map(
+                lambda a: a.reshape((-1,) + a.shape[meta.scanned:]), psub)
+        else:
+            psub = None
+
+        def one(xs):
+            c, d, p = xs
+            return _apply_flat(op, meta_f, c, d,
+                               params_sub=shared_p if shared_p is not None
+                               else p,
+                               weights=weights, norm_method=norm_method,
+                               conv_impl=conv_impl,
+                               embed_method=embed_method)
+
+        # Sequential over the stacked axis: bounds peak memory to one
+        # layer's worth (vmap would batch every layer's intermediates).
+        res = jax.lax.map(one, (cap_f, dy_f, psub))
+
+        if op == "norm_sq":
+            return jnp.sum(res, axis=0)
+        if op == "contrib":
+            if meta.shared:
+                return jax.tree.map(lambda a: jnp.sum(a, axis=0), res)
+            return jax.tree.map(
+                lambda a: a.reshape(stack_shape + a.shape[1:]), res)
+        # pe_grad: (G, B, *p) -> (B, *stack, *p)
+        if meta.shared:
+            return jax.tree.map(lambda a: jnp.sum(a, axis=0), res)
+        return jax.tree.map(
+            lambda a: jnp.moveaxis(
+                a.reshape(stack_shape + a.shape[1:]), len(stack_shape), 0),
+            res)
+
+    return _apply_flat(op, meta, cap, dy, params_sub=params_sub,
+                       weights=weights, norm_method=norm_method,
+                       conv_impl=conv_impl, embed_method=embed_method)
+
+
+def _unscanned(meta: LayerMeta) -> LayerMeta:
+    import dataclasses as dc
+    return dc.replace(meta, scanned=0, shared=False)
+
+
+def _apply_flat(op, meta, cap, dy, *, params_sub, weights, norm_method,
+                conv_impl, embed_method="segsum"):
+    kind = meta.kind
+    if kind == "dense" and not meta.segmented:
+        if op == "pe_grad":
+            return dense_pe_grad(meta, cap, dy)
+        if op == "norm_sq":
+            return dense_norm_sq(meta, cap, dy, method=norm_method)
+        return dense_contrib(meta, cap, dy, weights)
+    if kind == "dense" and meta.segmented:
+        if op == "pe_grad":
+            return seg_dense_pe_grad(meta, cap, dy)
+        if op == "norm_sq":
+            return seg_dense_norm_sq(meta, cap, dy, method=norm_method)
+        return seg_dense_contrib(meta, cap, dy, weights)
+    if kind == "embed":
+        vocab = (params_sub[meta.param_key].shape[-2]
+                 if params_sub is not None else meta.static.get("vocab"))
+        if op == "pe_grad":
+            return embed_pe_grad(meta, cap, dy, vocab)
+        if op == "norm_sq":
+            return embed_norm_sq(meta, cap, dy, method=embed_method)
+        return embed_contrib(meta, cap, dy, weights, vocab)
+    if kind == "scale":
+        gshape = tuple(params_sub[meta.param_key].shape)
+        if op == "pe_grad":
+            return scale_pe_grad(meta, cap, dy, gshape)
+        if op == "norm_sq":
+            return scale_norm_sq(meta, cap, dy, gshape)
+        return scale_contrib(meta, cap, dy, weights, gshape)
+    if kind == "conv":
+        if op == "pe_grad":
+            return conv_pe_grad(meta, cap, dy, impl=conv_impl)
+        if op == "norm_sq":
+            return conv_norm_sq(meta, cap, dy, impl=conv_impl)
+        return conv_contrib(meta, cap, dy, weights)
+    if kind == "local_vjp":
+        if op == "pe_grad":
+            return local_vjp_pe_grad(meta, cap, dy, params_sub)
+        if op == "norm_sq":
+            return local_vjp_norm_sq(meta, cap, dy, params_sub)
+        return local_vjp_contrib(meta, cap, dy, weights, params_sub)
+    raise ValueError(f"unknown kind {kind}")
+
+
+# ---------------------------------------------------------------------------
+# Tied-parameter cross term: <g_embed_b, g_head_b> for weight-tied LM heads
+
+
+def tied_embed_head_cross(cap_e, dy_e, cap_d, dy_d):
+    """2·⟨g_in, g_out⟩ per example for a parameter used both as an embedding
+    table (gather) and, transposed, as the LM head (dense w_transposed).
+
+      g_in[v,d]  = Σ_t 1[id_t=v] δe[t,d]
+      g_out[v,d] = Σ_s δl[s,v] h[s,d]
+      ⟨g_in,g_out⟩ = Σ_{t,s} δl[s, id_t] · (δe[t]·h[s])
+    """
+    ids = cap_e["ids"]
+    B = ids.shape[0]
+    ids2 = ids.reshape(B, -1)                      # (B, T)
+    de = dy_e.reshape(B, ids2.shape[1], -1)        # (B, T, D)
+    h = _flatten_seq(cap_d["x"])                   # (B, S, D)
+    dl = dy_d.reshape(B, h.shape[1], -1)           # (B, S, V)
+    a = _ee("btd,bsd->bts", de, h)                 # (B, T, S)
+    idx = jnp.broadcast_to(ids2[:, None, :], (B, h.shape[1], ids2.shape[1]))
+    dl_at = jnp.take_along_axis(dl, idx, axis=2)   # (B, S, T)
+    inner = _ee("bts,bst->b", a, dl_at)
+    return 2.0 * inner

@@ -1,0 +1,250 @@
+"""Per-example gradient strategies.
+
+The paper's three strategies plus the two production extensions:
+
+  * ``naive`` — batch-size-1 loop (``lax.map``); the semantics oracle.
+  * ``multi`` — ``vmap(grad)``: JAX's native realization of "B model copies
+    sharing parameters" (§2 of the paper, Goodfellow's GitHub suggestion).
+  * ``crb``   — the paper's chain-rule-based method: one standard backward
+    (via output taps), then per-layer reconstruction of per-example grads
+    from (captured input, output cotangent) — outer products for dense
+    layers, the grouped-convolution trick (Algorithms 1–2) for convs.
+  * ``ghost`` — per-example grad *norms* without materialization (Gram
+    trick) + a second, weighted backward pass.  O(1) extra memory.
+  * ``bk``    — "book-keeping": like ghost, but the clipped sum is formed
+    by weighted per-layer contractions from the captures already in hand —
+    no second backward.
+
+``apply_fn(params, batch, tapper) -> (B,) per-example losses`` is the only
+contract a model must satisfy.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import kinds
+from repro.core.tapper import (Tapper, capture_backward, get_subtree, probe,
+                               set_subtree)
+
+STRATEGIES = ("naive", "multi", "crb", "ghost", "bk")
+
+
+# ---------------------------------------------------------------------------
+# naive & multi
+
+
+def _single_example_grad_fn(apply_fn, params):
+    def gb(ex):
+        ex1 = jax.tree.map(lambda a: a[None], ex)
+
+        def loss(p):
+            return apply_fn(p, ex1, Tapper())[0]
+
+        return jax.value_and_grad(loss)(params)
+
+    return gb
+
+
+def naive_per_example_grads(apply_fn, params, batch):
+    """Batch-size-1 loop — sequential, the paper's `naive`."""
+    losses, grads = lax.map(_single_example_grad_fn(apply_fn, params), batch)
+    return losses, grads
+
+
+def multi_per_example_grads(apply_fn, params, batch):
+    """vmap(grad) — the paper's `multi` (model copies sharing params)."""
+    losses, grads = jax.vmap(_single_example_grad_fn(apply_fn, params))(batch)
+    return losses, grads
+
+
+# ---------------------------------------------------------------------------
+# crb: capture + reconstruct
+
+
+def _capture(apply_fn, params, batch):
+    make_taps, metas, _ = probe(apply_fn, params, batch)
+    losses, caps, dtaps = capture_backward(apply_fn, params, batch, make_taps())
+    return losses, caps, dtaps, metas
+
+
+def _accumulate_param_grads(acc: dict, path: tuple, sub: dict):
+    """acc[path][key] += sub[key] (creating entries)."""
+    slot = acc.setdefault(path, {})
+    for k, v in sub.items():
+        slot[k] = slot[k] + v if k in slot else v
+
+
+def _grads_to_tree(acc: dict) -> dict:
+    tree: dict = {}
+    for path, sub in acc.items():
+        for k, v in sub.items():
+            tree = set_subtree(tree, path + (k,), v)
+    return tree
+
+
+def check_coverage(params, grads_tree) -> list[str]:
+    """Param leaves with no per-example gradient contribution."""
+    p_paths = {jax.tree_util.keystr(kp)
+               for kp, _ in jax.tree_util.tree_leaves_with_path(params)}
+    g_paths = {jax.tree_util.keystr(kp)
+               for kp, _ in jax.tree_util.tree_leaves_with_path(grads_tree)}
+    return sorted(p_paths - g_paths)
+
+
+def crb_per_example_grads(apply_fn, params, batch, *, conv_impl: str = "fgc",
+                          check: bool = True):
+    """The paper's method: 1 backward + per-layer reconstruction."""
+    losses, caps, dtaps, metas = _capture(apply_fn, params, batch)
+    acc: dict = {}
+    for name, meta in metas.items():
+        pe = kinds.apply_kind(
+            "pe_grad", meta, caps[name], dtaps[name],
+            params_sub=get_subtree(params, meta.path), conv_impl=conv_impl)
+        _accumulate_param_grads(acc, meta.path, pe)
+    grads = _grads_to_tree(acc)
+    if check:
+        missing = check_coverage(params, grads)
+        if missing:
+            raise ValueError(f"params without per-example grads: {missing}")
+    return losses, grads
+
+
+# ---------------------------------------------------------------------------
+# ghost norms (shared by ghost & bk)
+
+
+def ghost_norms_from_captures(params, caps, dtaps, metas, *,
+                              norm_method: str = "auto",
+                              conv_impl: str = "fgc",
+                              embed_method: str = "segsum"):
+    """Per-example squared norms of the full gradient, grouping taps that
+    touch the same parameter (tied embeddings, shared blocks)."""
+    by_param = defaultdict(list)
+    for name, meta in metas.items():
+        by_param[meta.path].append(name)
+
+    B = None
+    for name in metas:
+        B = jax.tree.leaves(dtaps[name])[0].shape[metas[name].scanned]
+        break
+    total = jnp.zeros((B,), jnp.float32)
+
+    for path, names in by_param.items():
+        psub = get_subtree(params, path)
+        if len(names) == 1:
+            n = names[0]
+            total = total + kinds.apply_kind(
+                "norm_sq", metas[n], caps[n], dtaps[n], params_sub=psub,
+                norm_method=norm_method, conv_impl=conv_impl,
+                embed_method=embed_method)
+            continue
+        ks = sorted((metas[n].kind, metas[n].w_transposed) for n in names)
+        if ks == [("dense", True), ("embed", False)] and len(names) == 2:
+            # Tied embedding + LM head: per-tap norms plus the cross term.
+            n_e = next(n for n in names if metas[n].kind == "embed")
+            n_d = next(n for n in names if metas[n].kind == "dense")
+            total = total + kinds.apply_kind(
+                "norm_sq", metas[n_e], caps[n_e], dtaps[n_e], params_sub=psub,
+                embed_method=embed_method)
+            total = total + kinds.apply_kind(
+                "norm_sq", metas[n_d], caps[n_d], dtaps[n_d], params_sub=psub,
+                norm_method=norm_method)
+            total = total + kinds.tied_embed_head_cross(
+                caps[n_e], dtaps[n_e], caps[n_d], dtaps[n_d])
+            continue
+        # Generic exact fallback: materialize the summed per-example grad.
+        pe_sum: dict = {}
+        for n in names:
+            pe = kinds.apply_kind("pe_grad", metas[n], caps[n], dtaps[n],
+                                  params_sub=psub, conv_impl=conv_impl)
+            for k, v in pe.items():
+                pe_sum[k] = pe_sum[k] + v if k in pe_sum else v
+        total = total + kinds._sumsq(pe_sum)
+    return total
+
+
+def ghost_norms(apply_fn, params, batch, **kw):
+    losses, caps, dtaps, metas = _capture(apply_fn, params, batch)
+    norms_sq = ghost_norms_from_captures(params, caps, dtaps, metas, **kw)
+    return losses, norms_sq, (caps, dtaps, metas)
+
+
+# ---------------------------------------------------------------------------
+# clipped gradient sums (the DP-SGD core)
+
+
+def clip_coefficients(norms_sq, l2_clip, eps: float = 1e-12):
+    norms = jnp.sqrt(norms_sq + eps)
+    return jnp.minimum(1.0, l2_clip / norms)
+
+
+def _pe_tree_norms_sq(pe_grads):
+    return kinds._sumsq(pe_grads)
+
+
+def clipped_grad_sum(apply_fn, params, batch, *, l2_clip: float,
+                     strategy: str = "ghost", norm_method: str = "auto",
+                     conv_impl: str = "fgc", check: bool = False,
+                     embed_method: str = "segsum"):
+    """Returns (per-example losses, Σ_b clip(g_b), per-example norms²)."""
+    if strategy in ("naive", "multi", "crb"):
+        if strategy == "naive":
+            losses, pe = naive_per_example_grads(apply_fn, params, batch)
+        elif strategy == "multi":
+            losses, pe = multi_per_example_grads(apply_fn, params, batch)
+        else:
+            losses, pe = crb_per_example_grads(
+                apply_fn, params, batch, conv_impl=conv_impl, check=check)
+        norms_sq = _pe_tree_norms_sq(pe)
+        coef = clip_coefficients(norms_sq, l2_clip)
+        gsum = jax.tree.map(
+            lambda g: jnp.einsum("b...,b->...", g.astype(jnp.float32), coef),
+            pe)
+        return losses, gsum, norms_sq
+
+    losses, caps, dtaps, metas = _capture(apply_fn, params, batch)
+    norms_sq = ghost_norms_from_captures(
+        params, caps, dtaps, metas, norm_method=norm_method,
+        conv_impl=conv_impl, embed_method=embed_method)
+    coef = lax.stop_gradient(clip_coefficients(norms_sq, l2_clip))
+
+    if strategy == "ghost":
+        def wloss(p):
+            losses2 = apply_fn(p, batch, Tapper())
+            return jnp.sum(losses2 * coef)
+
+        gsum = jax.grad(wloss)(params)
+        return losses, gsum, norms_sq
+
+    if strategy == "bk":
+        acc: dict = {}
+        for name, meta in metas.items():
+            contrib = kinds.apply_kind(
+                "contrib", meta, caps[name], dtaps[name],
+                params_sub=get_subtree(params, meta.path), weights=coef,
+                conv_impl=conv_impl)
+            _accumulate_param_grads(acc, meta.path, contrib)
+        gsum = _grads_to_tree(acc)
+        if check:
+            missing = check_coverage(params, gsum)
+            if missing:
+                raise ValueError(f"bk missing param contribs: {missing}")
+        return losses, gsum, norms_sq
+
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def per_example_grads(apply_fn, params, batch, strategy: str = "crb", **kw):
+    """Materialized per-example gradients (B leading on every leaf)."""
+    if strategy == "naive":
+        return naive_per_example_grads(apply_fn, params, batch)
+    if strategy == "multi":
+        return multi_per_example_grads(apply_fn, params, batch)
+    if strategy == "crb":
+        return crb_per_example_grads(apply_fn, params, batch, **kw)
+    raise ValueError(
+        f"strategy {strategy!r} does not materialize per-example grads")

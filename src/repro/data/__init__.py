@@ -1,0 +1,6 @@
+from repro.data.synthetic import (SyntheticImageDataset, SyntheticLMDataset,
+                                  poisson_batch_indices)
+from repro.data.loader import PrefetchLoader, shard_for_host
+
+__all__ = ["SyntheticImageDataset", "SyntheticLMDataset",
+           "poisson_batch_indices", "PrefetchLoader", "shard_for_host"]

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) attention, forward.
+
+Causal GQA attention without materializing the (T, S) score matrix in HBM.
+Grid (B, H, T/bq, S/bk); the last grid dim is sequential and carries the
+online-softmax state (row max m, row sum l, output accumulator) in VMEM
+scratch.  GQA is handled in the k/v index maps (h -> h // rep) so the
+shared KV heads are never physically repeated.
+
+Used by the serving prefill path (32k-sequence attention is memory-bound;
+the score tensor alone would be T²·H·4 bytes).  Training uses the XLA
+chunked reference (attention backward via the kernel is future work).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pltpu is only importable where TPU lowering exists; interpret-safe
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, bq: int, bk: int, causal: bool):
+    i, j = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                       # (bq, hd)
+    k = k_ref[0, 0]                       # (bk, hd)
+    v = v_ref[0, 0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        qi = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kj = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kj <= qi, s, NEG)
+
+    m_prev = m_scr[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_scr[:, 0] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + \
+        jnp.dot(p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[:, 0] = m_new
+    l_scr[:, 0] = l_new
+
+    @pl.when(j == pl.num_programs(3) - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[:, 0], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
+                    bk: int = 512, interpret: bool = True):
+    """q (B,T,H,hd); k,v (B,S,Hkv,hd) with H % Hkv == 0 -> (B,T,H,hd)."""
+    B, T, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    bq, bk = min(bq, T), min(bk, S)
+    assert T % bq == 0 and S % bk == 0, (T, bq, S, bk)
+    scale = hd ** -0.5
+    qt = jnp.moveaxis(q, 2, 1)            # (B,H,T,hd)
+    kt = jnp.moveaxis(k, 2, 1)            # (B,Hkv,S,hd)
+    vt = jnp.moveaxis(v, 2, 1)
+
+    if _VMEM is not None:
+        scratch = [_VMEM((bq, 1), jnp.float32), _VMEM((bq, 1), jnp.float32),
+                   _VMEM((bq, hd), jnp.float32)]
+    else:  # pragma: no cover
+        scratch = [pl.MemorySpace.ANY] * 3
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, bq=bq, bk=bk,
+                          causal=causal),
+        grid=(B, H, T // bq, S // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, hd), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out, 1, 2)

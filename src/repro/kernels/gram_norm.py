@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: per-example ghost-norm Gram reduction.
+
+Computes, per example b,
+
+    out[b] = Σ_{t,t'} (x_{b,t}·x_{b,t'}) (δy_{b,t}·δy_{b,t'})   [+ bias term]
+
+i.e. ‖δy_bᵀ x_b‖²_F without materializing either the per-example gradient
+(T·Din·Dout) or the full (T,T) Gram matrices in HBM.  XLA realizes the same
+contraction as two (B,T,T) batched matmuls with an HBM round-trip between
+them; here the (bt × bt) Gram tiles live only in VMEM and feed the MXU
+twice per tile pair.
+
+Grid: (B, T/bt, T/bt); the output block (1,) is revisited across the two
+inner (sequential) grid dims and accumulated in place.
+
+A token-mask variant (for embedding-gather norms) multiplies the δy-Gram
+tile by [ids_t == ids_{t'}] instead of an x-Gram.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BT = 256
+
+
+def _gram_kernel(x_i, x_j, y_i, y_j, o_ref, *, has_bias: bool):
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    gx = jnp.dot(x_i[0], x_j[0].T, preferred_element_type=jnp.float32)
+    gy = jnp.dot(y_i[0], y_j[0].T, preferred_element_type=jnp.float32)
+    acc = jnp.sum(gx * gy)
+    if has_bias:
+        acc = acc + jnp.sum(gy)
+    o_ref[0] += acc
+
+
+def _gram_tokmask_kernel(ids_i, ids_j, y_i, y_j, o_ref):
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    gy = jnp.dot(y_i[0], y_j[0].T, preferred_element_type=jnp.float32)
+    mask = (ids_i[0][:, None] == ids_j[0][None, :])
+    o_ref[0] += jnp.sum(jnp.where(mask, gy, 0.0))
+
+
+def _pad_t(a, bt):
+    T = a.shape[1]
+    pad = (-T) % bt
+    if pad:
+        cfg = [(0, 0)] * a.ndim
+        cfg[1] = (0, pad)
+        a = jnp.pad(a, cfg)
+    return a
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("has_bias", "bt", "interpret"))
+def gram_norm(x, dy, *, has_bias: bool = False, bt: int = DEFAULT_BT,
+              interpret: bool = True):
+    """x (B,T,Din), dy (B,T,Dout) -> (B,) fp32 squared per-example norms."""
+    B, T, Di = x.shape
+    Do = dy.shape[-1]
+    bt = min(bt, max(8, 1 << (T - 1).bit_length()))
+    x, dy = _pad_t(x, bt), _pad_t(dy, bt)
+    Tp = x.shape[1]
+    grid = (B, Tp // bt, Tp // bt)
+    return pl.pallas_call(
+        functools.partial(_gram_kernel, has_bias=has_bias),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, Di), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bt, Di), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bt, Do), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bt, Do), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda b, i, j: (b,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=interpret,
+    )(x, x, dy, dy)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def gram_norm_tokmask(ids, dy, *, bt: int = DEFAULT_BT,
+                      interpret: bool = True):
+    """Embedding-gather ghost norm: out[b] = Σ_{t,t'} [id_t==id_t'] δy·δy."""
+    B, T = ids.shape
+    Do = dy.shape[-1]
+    bt = min(bt, max(8, 1 << (T - 1).bit_length()))
+    pad = (-T) % bt
+    if pad:
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+        dy = jnp.pad(dy, ((0, 0), (0, pad), (0, 0)))
+    Tp = ids.shape[1]
+    grid = (B, Tp // bt, Tp // bt)
+    return pl.pallas_call(
+        _gram_tokmask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bt), lambda b, i, j: (b, j)),
+            pl.BlockSpec((1, bt, Do), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bt, Do), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda b, i, j: (b,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=interpret,
+    )(ids, ids, dy, dy)

@@ -1,0 +1,76 @@
+"""jit'd public wrappers + platform dispatch for the Pallas kernels.
+
+On TPU the kernels lower natively; elsewhere (this CPU container, and the
+multi-pod dry-run on the host platform) ``interpret=True`` executes the
+kernel body for correctness, or the pure-jnp reference is used where the
+interpreter would be too slow.  ``use_pallas()`` centralizes the decision.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attn as _fa
+from repro.kernels import gram_norm as _gn
+from repro.kernels import pe_conv_grad as _pc
+from repro.kernels import ref as _ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gram_norm(x, dy, *, has_bias: bool = False, bt: int = 256):
+    if on_tpu():
+        return _gn.gram_norm(x, dy, has_bias=has_bias, bt=bt,
+                             interpret=False)
+    return _gn.gram_norm(x, dy, has_bias=has_bias, bt=bt, interpret=True)
+
+
+def gram_norm_tokmask(ids, dy, *, bt: int = 256):
+    return _gn.gram_norm_tokmask(ids, dy, bt=bt, interpret=not on_tpu())
+
+
+def pe_conv_grad(x, dy, *, kernel_spatial, stride=1, dilation=1, padding=0,
+                 groups: int = 1):
+    """Pallas path for Algorithm 2.  Plain convs (stride=dilation=1,
+    groups=1) hit the kernel; anything else falls back to the XLA
+    grouped-conv lowering (still the paper's algorithm)."""
+    from repro.models import convops
+
+    def _as_tuple(v, n):
+        return tuple(v) if isinstance(v, (tuple, list)) else (v,) * n
+
+    rank = len(kernel_spatial)
+    plain = (groups == 1 and _as_tuple(stride, rank) == (1,) * rank
+             and _as_tuple(dilation, rank) == (1,) * rank)
+    interp = not on_tpu()
+    if plain and rank in (1, 2):
+        p = _as_tuple(padding, rank)
+        if any(p):
+            cfg = [(0, 0), (0, 0)] + [(pi, pi) for pi in p]
+            x = jnp.pad(x, cfg)
+        if rank == 1:
+            return _pc.pe_conv_grad_1d(x, dy, K=kernel_spatial[0],
+                                       interpret=interp)
+        return _pc.pe_conv_grad_2d(x, dy, KH=kernel_spatial[0],
+                                   KW=kernel_spatial[1], interpret=interp)
+    return convops.pe_conv_grad(x, dy, kernel_spatial=kernel_spatial,
+                                stride=stride, dilation=dilation,
+                                padding=padding, groups=groups, impl="fgc")
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
+                    bk: int = 512):
+    if on_tpu():
+        return _fa.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                                   interpret=False)
+    # CPU: the interpreter is correct but slow; keep it for small shapes,
+    # use the reference beyond that.
+    if q.shape[1] * k.shape[1] <= 1 << 20:
+        return _fa.flash_attention(q, k, v, causal=causal,
+                                   bq=min(bq, q.shape[1]),
+                                   bk=min(bk, k.shape[1]), interpret=True)
+    return _ref.flash_attention_ref(q, k, v, causal=causal)

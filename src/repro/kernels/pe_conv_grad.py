@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: per-example convolution weight gradients.
+
+The paper's Algorithm 2 as a direct TPU kernel instead of a grouped-conv
+lowering: for each example b (and output-channel tile),
+
+    δh[b,d,c,k] = Σ_t x[b,c,t+k] · δy[b,d,t]          (1-D)
+    δh[b,d,c,kh,kw] = Σ_{h,w} x[b,c,h+kh,w+kw] δy[b,d,h,w]   (2-D)
+
+Each (b, d-tile) grid cell holds x (C, spatial) and a δy tile in VMEM and
+issues K (or KH·KW) MXU matmuls of shape (bd, T')×(T', C) — the kernel
+windows are static unrolls, so there is no gather.  Stride/dilation/padding
+are handled by the wrapper in ops.py (pre-dilating δy / padding x), which
+falls back to the XLA grouped-conv lowering for exotic configurations.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel_1d(x_ref, dy_ref, o_ref, *, K: int, Tp: int):
+    x = x_ref[0]            # (C, T)
+    dy = dy_ref[0]          # (bd, Tp)
+    for k in range(K):
+        xs = jax.lax.dynamic_slice_in_dim(x, k, Tp, axis=1)   # static k
+        o_ref[0, :, :, k] = jnp.dot(dy, xs.T,
+                                    preferred_element_type=jnp.float32)
+
+
+def _kernel_2d(x_ref, dy_ref, o_ref, *, KH: int, KW: int, Hp: int, Wp: int):
+    x = x_ref[0]            # (C, H, W)
+    dy = dy_ref[0]          # (bd, Hp, Wp)
+    dyf = dy.reshape(dy.shape[0], Hp * Wp)
+    for kh in range(KH):
+        for kw in range(KW):
+            xs = x[:, kh:kh + Hp, kw:kw + Wp].reshape(x.shape[0], Hp * Wp)
+            o_ref[0, :, :, kh, kw] = jnp.dot(
+                dyf, xs.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("K", "bd", "interpret"))
+def pe_conv_grad_1d(x, dy, *, K: int, bd: int = 0, interpret: bool = True):
+    """x (B,C,T), dy (B,D,T') -> (B,D,C,K); stride=dilation=1, groups=1."""
+    B, C, T = x.shape
+    _, D, Tp = dy.shape
+    bd = bd or D
+    assert D % bd == 0
+    return pl.pallas_call(
+        functools.partial(_kernel_1d, K=K, Tp=Tp),
+        grid=(B, D // bd),
+        in_specs=[
+            pl.BlockSpec((1, C, T), lambda b, d: (b, 0, 0)),
+            pl.BlockSpec((1, bd, Tp), lambda b, d: (b, d, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bd, C, K), lambda b, d: (b, d, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D, C, K), jnp.float32),
+        interpret=interpret,
+    )(x, dy)
+
+
+@functools.partial(jax.jit, static_argnames=("KH", "KW", "bd", "interpret"))
+def pe_conv_grad_2d(x, dy, *, KH: int, KW: int, bd: int = 0,
+                    interpret: bool = True):
+    """x (B,C,H,W), dy (B,D,H',W') -> (B,D,C,KH,KW)."""
+    B, C, H, W = x.shape
+    _, D, Hp, Wp = dy.shape
+    bd = bd or D
+    assert D % bd == 0
+    return pl.pallas_call(
+        functools.partial(_kernel_2d, KH=KH, KW=KW, Hp=Hp, Wp=Wp),
+        grid=(B, D // bd),
+        in_specs=[
+            pl.BlockSpec((1, C, H, W), lambda b, d: (b, 0, 0, 0)),
+            pl.BlockSpec((1, bd, Hp, Wp), lambda b, d: (b, d, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bd, C, KH, KW),
+                               lambda b, d: (b, d, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D, C, KH, KW), jnp.float32),
+        interpret=interpret,
+    )(x, dy)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gram_norm_ref(x, dy, *, has_bias: bool = False):
+    """out[b] = ‖δy_bᵀ x_b‖²_F  (+ ‖Σ_t δy‖² if has_bias)."""
+    g = jnp.einsum("bti,bto->bio", x.astype(jnp.float32),
+                   dy.astype(jnp.float32))
+    n = jnp.sum(g * g, axis=(1, 2))
+    if has_bias:
+        bg = jnp.sum(dy.astype(jnp.float32), axis=1)
+        n = n + jnp.sum(bg * bg, axis=1)
+    return n
+
+
+def gram_norm_tokmask_ref(ids, dy):
+    dyf = dy.astype(jnp.float32)
+    sy = jnp.einsum("btd,bsd->bts", dyf, dyf)
+    m = (ids[:, :, None] == ids[:, None, :]).astype(jnp.float32)
+    return jnp.einsum("bts,bts->b", m, sy)
+
+
+def pe_conv_grad_1d_ref(x, dy, K: int):
+    """Brute-force: δh[b,d,c,k] = Σ_t x[b,c,t+k] dy[b,d,t]."""
+    B, C, T = x.shape
+    _, D, Tp = dy.shape
+    xs = jnp.stack([x[:, :, k:k + Tp] for k in range(K)], axis=-1)  # (B,C,Tp,K)
+    return jnp.einsum("bctk,bdt->bdck", xs.astype(jnp.float32),
+                      dy.astype(jnp.float32))
+
+
+def pe_conv_grad_2d_ref(x, dy, KH: int, KW: int):
+    B, C, H, W = x.shape
+    _, D, Hp, Wp = dy.shape
+    out = []
+    for kh in range(KH):
+        row = []
+        for kw in range(KW):
+            xs = x[:, :, kh:kh + Hp, kw:kw + Wp]
+            row.append(jnp.einsum("bchw,bdhw->bdc", xs.astype(jnp.float32),
+                                  dy.astype(jnp.float32)))
+        out.append(jnp.stack(row, axis=-1))
+    return jnp.stack(out, axis=-2)  # (B,D,C,KH,KW)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    B, T, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bthd,bshd->bhts", q, kr,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((T, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", p.astype(v.dtype), vr)

@@ -1,0 +1,7 @@
+"""Launchers: production mesh, sharding rules, dry-run, train, serve."""
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.sharding import (batch_sharding, mesh_rules,
+                                   param_sharding, shard_act)
+
+__all__ = ["make_host_mesh", "make_production_mesh", "batch_sharding",
+           "mesh_rules", "param_sharding", "shard_act"]

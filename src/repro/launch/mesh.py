@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Target: TPU v5e pods, 256 chips each, mesh
+(data=16, model=16); the multi-pod mesh adds a leading "pod" axis that the
+launchers treat as an extra pure-data axis.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(jax.devices())} — "
+            "the dry-run launcher must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_host_mesh(model_par: int = 1):
+    """Small mesh over whatever devices exist (tests, CPU training)."""
+    n = len(jax.devices())
+    data = n // model_par
+    return jax.make_mesh((data, model_par), ("data", "model"),
+                         devices=jax.devices()[: data * model_par])

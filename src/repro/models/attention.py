@@ -1,0 +1,318 @@
+"""Attention variants: GQA (+RoPE, qk-norm, sliding window, cross) and
+DeepSeek-style MLA (multi-head latent attention), with KV caches for
+prefill/decode serving and a chunked long-context path.
+
+All projections go through tapped denses so per-example gradients cover
+every attention parameter.  Serving paths pass a no-op Tapper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.tapper import Tapper
+from repro.launch.sharding import shard_act
+from repro.models import common as cm
+
+NEG = -1e30
+CHUNK_Q = 1024
+AUTO_CHUNK_FROM = 8192
+
+
+# ---------------------------------------------------------------------------
+# Core softmax attention
+
+
+def _sdpa(q, k, v, mask):
+    """q (B,T,H,hd), k/v (B,S,H,hd), mask broadcastable to (B,H,T,S)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bthd,bshd->bhts", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", p.astype(v.dtype), v)
+
+
+def _causal_mask(T, S, offset=0, window=0):
+    """mask[t, s] = (s - offset) <= t  [and within window]."""
+    t = jnp.arange(T)[:, None]
+    s = jnp.arange(S)[None, :] - offset
+    m = s <= t
+    if window:
+        m = m & (s > t - window)
+    return m[None, None]
+
+
+def sdpa_chunked(q, k, v, *, offset=0, window=0, chunk=CHUNK_Q):
+    """Causal attention scanned over query chunks — bounds the (T,S) score
+    tensor to (chunk, S).  jnp reference of the flash kernel."""
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    n = T // chunk
+    assert T % chunk == 0, (T, chunk)
+    qs = jnp.moveaxis(q.reshape(B, n, chunk, H, hd), 1, 0)
+
+    def body(_, qc_i):
+        qc, i = qc_i
+        t0 = i * chunk
+        t = t0 + jnp.arange(chunk)[:, None]
+        s = jnp.arange(S)[None, :] - offset
+        m = s <= t
+        if window:
+            m = m & (s > t - window)
+        return None, _sdpa(qc, k, v, m[None, None])
+
+    _, out = lax.scan(body, None, (qs, jnp.arange(n)))
+    return jnp.moveaxis(out, 0, 1).reshape(B, T, H, hd)
+
+
+def attend(q, k, v, *, causal=True, offset=0, window=0, impl="auto",
+           valid_len=None):
+    """Dispatch attention impl.  valid_len masks cache slots >= pos."""
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    if impl == "auto":
+        impl = "chunked" if (T >= AUTO_CHUNK_FROM and causal and
+                             valid_len is None and T % CHUNK_Q == 0) else "xla"
+    if impl == "chunked":
+        return sdpa_chunked(q, k, v, offset=offset, window=window)
+    if causal and T > 1:
+        mask = _causal_mask(T, S, offset=offset, window=window)
+    else:
+        mask = jnp.ones((1, 1, T, S), bool)
+    if valid_len is not None:
+        mask = mask & (jnp.arange(S)[None, None, None, :] < valid_len)
+        if window:
+            mask = mask & (jnp.arange(S)[None, None, None, :]
+                           >= valid_len - window)
+    return _sdpa(q, k, v, mask)
+
+
+def repeat_kv(k, n_rep: int):
+    return k if n_rep == 1 else jnp.repeat(k, n_rep, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+
+
+def gqa_init(key, d_model, n_heads, n_kv, head_dim, *, qk_norm=False,
+             bias=False, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": {"w": cm.mk(ks[0], (d_model, n_heads * head_dim),
+                          ("embed", "heads"), dtype=dtype)},
+        "wk": {"w": cm.mk(ks[1], (d_model, n_kv * head_dim),
+                          ("embed", "kv"), dtype=dtype)},
+        "wv": {"w": cm.mk(ks[2], (d_model, n_kv * head_dim),
+                          ("embed", "kv"), dtype=dtype)},
+        "wo": {"w": cm.mk(ks[3], (n_heads * head_dim, d_model),
+                          ("heads", "embed"), dtype=dtype)},
+    }
+    if bias:
+        for i, n in enumerate(("wq", "wk", "wv", "wo")):
+            dim = p[n]["w"].value.shape[1]
+            ax = p[n]["w"].axes[1]
+            p[n]["b"] = cm.mk(ks[4 + i], (dim,), (ax,), dist="zeros",
+                              dtype=dtype)
+    if qk_norm:
+        p["qn"] = {"g": cm.mk(ks[4], (head_dim,), (None,), dist="ones",
+                              dtype=dtype)}
+        p["kn"] = {"g": cm.mk(ks[5], (head_dim,), (None,), dist="ones",
+                              dtype=dtype)}
+    return p
+
+
+def gqa_apply(tp: Tapper, name: str, p, x, *, n_heads, n_kv, head_dim,
+              rope_theta=1e4, qk_norm=False, positions=None, causal=True,
+              window=0, cache=None, x_kv=None, attn_impl="auto",
+              use_rope=True):
+    """Returns (attn_out, new_cache).  cache: {"k","v","pos"} or None.
+
+    x_kv: source sequence for cross attention (no cache, no causal mask,
+    no rope on either side unless positions given).
+    """
+    B, T, _ = x.shape
+    q = tp.dense(f"{name}/wq", x, p["wq"]["w"], p["wq"].get("b"))
+    src = x if x_kv is None else x_kv
+    k = tp.dense(f"{name}/wk", src, p["wk"]["w"], p["wk"].get("b"))
+    v = tp.dense(f"{name}/wv", src, p["wv"]["w"], p["wv"].get("b"))
+    S = src.shape[1]
+    q = q.reshape(B, T, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv, head_dim)
+    v = v.reshape(B, S, n_kv, head_dim)
+    q = shard_act(q, "batch", "seq", "heads", None)
+    k = shard_act(k, "batch", "seq", "kv", None)
+
+    if qk_norm:
+        q = cm.rmsnorm(tp, f"{name}/qn", p["qn"], q)
+        k = cm.rmsnorm(tp, f"{name}/kn", p["kn"], k)
+
+    if use_rope and x_kv is None:
+        if positions is None:
+            positions = jnp.arange(T)[None, :] + (
+                cache["pos"] if cache is not None else 0)
+            positions = jnp.broadcast_to(positions, (B, T))
+        cos, sin = cm.rope_angles(positions, head_dim, rope_theta)
+        q = cm.apply_rope(q, cos, sin)
+        kpos = positions if cache is None else positions
+        cos_k, sin_k = cm.rope_angles(kpos, head_dim, rope_theta)
+        k = cm.apply_rope(k, cos_k, sin_k)
+
+    new_cache = None
+    if cache is not None:
+        S_max = cache["k"].shape[1]
+        ring = bool(window) and S_max <= window  # fixed-size rolling cache
+        idx = lax.rem(cache["pos"], S_max) if ring else cache["pos"]
+        ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, idx, 0, 0))
+        cv = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv, "pos": cache["pos"] + T}
+        k, v = ck, cv
+        valid = jnp.minimum(new_cache["pos"], S_max)
+        out = attend(q, repeat_kv(k, n_heads // n_kv),
+                     repeat_kv(v, n_heads // n_kv),
+                     causal=(T > 1), offset=idx, valid_len=valid, window=0,
+                     impl="xla")
+    else:
+        out = attend(q, repeat_kv(k, n_heads // n_kv),
+                     repeat_kv(v, n_heads // n_kv),
+                     causal=causal and x_kv is None, window=window,
+                     impl=attn_impl)
+
+    out = out.reshape(B, T, n_heads * head_dim)
+    out = tp.dense(f"{name}/wo", out, p["wo"]["w"], p["wo"].get("b"))
+    return out, new_cache
+
+
+def gqa_cache(batch, max_len, n_kv, head_dim, dtype=jnp.float32):
+    return {"k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+            "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3): latent-compressed KV, decoupled rope head
+
+
+def mla_init(key, d_model, n_heads, *, q_lora_rank, kv_lora_rank, qk_nope_dim,
+             qk_rope_dim, v_head_dim, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    qd = qk_nope_dim + qk_rope_dim
+    p = {
+        "wkv_a": {"w": cm.mk(ks[2], (d_model, kv_lora_rank + qk_rope_dim),
+                             ("embed", "kvrank"), dtype=dtype)},
+        "kv_norm": {"g": cm.mk(ks[3], (kv_lora_rank,), ("kvrank",),
+                               dist="ones", dtype=dtype)},
+        "wkv_b": {"w": cm.mk(ks[4], (kv_lora_rank,
+                                     n_heads * (qk_nope_dim + v_head_dim)),
+                             ("kvrank", "heads"), dtype=dtype)},
+        "wo": {"w": cm.mk(ks[5], (n_heads * v_head_dim, d_model),
+                          ("heads", "embed"), dtype=dtype)},
+    }
+    if q_lora_rank:
+        p["wq_a"] = {"w": cm.mk(ks[0], (d_model, q_lora_rank),
+                                ("embed", "qrank"), dtype=dtype)}
+        p["q_norm"] = {"g": cm.mk(ks[6], (q_lora_rank,), ("qrank",),
+                                  dist="ones", dtype=dtype)}
+        p["wq_b"] = {"w": cm.mk(ks[1], (q_lora_rank, n_heads * qd),
+                                ("qrank", "heads"), dtype=dtype)}
+    else:
+        p["wq"] = {"w": cm.mk(ks[0], (d_model, n_heads * qd),
+                              ("embed", "heads"), dtype=dtype)}
+    return p
+
+
+def mla_apply(tp: Tapper, name: str, p, x, *, n_heads, q_lora_rank,
+              kv_lora_rank, qk_nope_dim, qk_rope_dim, v_head_dim,
+              rope_theta=1e4, positions=None, cache=None, attn_impl="auto",
+              absorbed_decode: bool = False):
+    """Returns (out, new_cache).  cache stores the *latent* kv:
+    {"ckv" (B,S,kvr), "krope" (B,S,dr), "pos"}."""
+    B, T, D = x.shape
+    qd = qk_nope_dim + qk_rope_dim
+
+    if q_lora_rank:
+        cq = tp.dense(f"{name}/wq_a", x, p["wq_a"]["w"])
+        cq = cm.rmsnorm(tp, f"{name}/q_norm", p["q_norm"], cq)
+        q = tp.dense(f"{name}/wq_b", cq, p["wq_b"]["w"])
+    else:
+        q = tp.dense(f"{name}/wq", x, p["wq"]["w"])
+    q = q.reshape(B, T, n_heads, qd)
+    q_nope, q_rope = q[..., :qk_nope_dim], q[..., qk_nope_dim:]
+
+    kv_a = tp.dense(f"{name}/wkv_a", x, p["wkv_a"]["w"])
+    ckv, k_rope = kv_a[..., :kv_lora_rank], kv_a[..., kv_lora_rank:]
+    ckv = cm.rmsnorm(tp, f"{name}/kv_norm", p["kv_norm"], ckv)
+
+    if positions is None:
+        positions = jnp.arange(T)[None, :] + (
+            cache["pos"] if cache is not None else 0)
+        positions = jnp.broadcast_to(positions, (B, T))
+    cos, sin = cm.rope_angles(positions, qk_rope_dim, rope_theta)
+    q_rope = cm.apply_rope(q_rope, cos, sin)
+    k_rope = cm.apply_rope(k_rope[:, :, None, :], cos, sin)  # (B,T,1,dr)
+
+    new_cache = None
+    if cache is not None:
+        ckv_c = lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache["pos"], 0))
+        kr_c = lax.dynamic_update_slice(
+            cache["krope"], k_rope[:, :, 0].astype(cache["krope"].dtype),
+            (0, cache["pos"], 0))
+        new_cache = {"ckv": ckv_c, "krope": kr_c, "pos": cache["pos"] + T}
+        S = ckv_c.shape[1]
+        valid = new_cache["pos"]
+        if absorbed_decode:
+            # Fold wkv_b into the query/output sides: attention runs in the
+            # latent space, no per-step decompression of the whole cache.
+            wkv_b = p["wkv_b"]["w"].reshape(
+                kv_lora_rank, n_heads, qk_nope_dim + v_head_dim)
+            wk_b, wv_b = wkv_b[..., :qk_nope_dim], wkv_b[..., qk_nope_dim:]
+            q_lat = jnp.einsum("bthd,chd->bthc", q_nope, wk_b)
+            scale = qd ** -0.5
+            s = (jnp.einsum("bthc,bsc->bhts", q_lat, ckv_c,
+                            preferred_element_type=jnp.float32)
+                 + jnp.einsum("bthr,bsr->bhts", q_rope, kr_c,
+                              preferred_element_type=jnp.float32)) * scale
+            mask = jnp.arange(S)[None, None, None, :] < valid
+            if T > 1:  # causal among the new tokens (prefill-into-cache)
+                t_idx = cache["pos"] + jnp.arange(T)[:, None]
+                mask = mask & (jnp.arange(S)[None, :] <= t_idx)[None, None]
+            s = jnp.where(mask, s, NEG)
+            pr = jax.nn.softmax(s, axis=-1).astype(ckv_c.dtype)
+            o_lat = jnp.einsum("bhts,bsc->bthc", pr, ckv_c)
+            out = jnp.einsum("bthc,chd->bthd", o_lat, wv_b)
+        else:
+            kv = jnp.matmul(ckv_c, p["wkv_b"]["w"]).reshape(
+                B, S, n_heads, qk_nope_dim + v_head_dim)
+            k_nope, vfull = kv[..., :qk_nope_dim], kv[..., qk_nope_dim:]
+            k_full = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(kr_c[:, :, None, :],
+                                          (B, S, n_heads, qk_rope_dim))], -1)
+            qf = jnp.concatenate([q_nope, q_rope], -1)
+            out = attend(qf, k_full, vfull, causal=(T > 1),
+                         offset=cache["pos"], valid_len=valid, impl="xla")
+        out = out.reshape(B, T, n_heads * v_head_dim)
+        out = tp.dense(f"{name}/wo", out, p["wo"]["w"])
+        return out, new_cache
+
+    # train / prefill-style full pass
+    kv = tp.dense(f"{name}/wkv_b", ckv, p["wkv_b"]["w"]).reshape(
+        B, T, n_heads, qk_nope_dim + v_head_dim)
+    k_nope, v = kv[..., :qk_nope_dim], kv[..., qk_nope_dim:]
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, T, n_heads, qk_rope_dim))], -1)
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    out = attend(qf, k_full, v, causal=True, impl=attn_impl)
+    out = out.reshape(B, T, n_heads * v_head_dim)
+    out = tp.dense(f"{name}/wo", out, p["wo"]["w"])
+    return out, None
+
+
+def mla_cache(batch, max_len, kv_lora_rank, qk_rope_dim, dtype=jnp.float32):
+    return {"ckv": jnp.zeros((batch, max_len, kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_len, qk_rope_dim), dtype),
+            "pos": jnp.zeros((), jnp.int32)}

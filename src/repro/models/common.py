@@ -1,0 +1,140 @@
+"""Shared model-building blocks: parameter builder with logical sharding
+axes, norms (tapped affines), RoPE, and per-example losses."""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tapper import Tapper
+from repro.launch.sharding import shard_act
+
+
+# ---------------------------------------------------------------------------
+# Parameter builder: every param leaf is a Pm(value, logical_axes) pair until
+# `split_tree` separates them.
+
+
+@dataclasses.dataclass
+class Pm:
+    value: object
+    axes: tuple
+
+
+def is_pm(x):
+    return isinstance(x, Pm)
+
+
+def mk(key, shape, axes, *, scale=None, dist="normal", dtype=jnp.float32):
+    assert len(shape) == len(axes), (shape, axes)
+    if dist == "zeros":
+        return Pm(jnp.zeros(shape, dtype), axes)
+    if dist == "ones":
+        return Pm(jnp.ones(shape, dtype), axes)
+    if scale is None:
+        scale = 1.0 / math.sqrt(shape[0] if len(shape) else 1.0)
+    return Pm((jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype),
+              axes)
+
+
+def split_tree(tree):
+    """-> (params, axes) from a Pm tree."""
+    params = jax.tree.map(lambda p: p.value, tree, is_leaf=is_pm)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_pm)
+    return params, axes
+
+
+def stack_layers(key, n: int, layer_init):
+    """Initialize `n` layers and stack each leaf with a leading 'layer' axis."""
+    trees = [layer_init(k) for k in jax.random.split(key, n)]
+    def stack(*ps):
+        return Pm(jnp.stack([p.value for p in ps]), ("layer",) + ps[0].axes)
+    return jax.tree.map(stack, *trees, is_leaf=is_pm)
+
+
+# ---------------------------------------------------------------------------
+# Norms (affine parts are tapped so their per-example grads are covered)
+
+
+def rmsnorm(tp: Tapper, name: str, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    nx = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    nx = nx.astype(x.dtype)
+    if p is None:
+        return nx
+    return tp.scale(name, nx, p["g"])
+
+
+def layernorm(tp: Tapper, name: str, p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    nx = (xf - mu) * jax.lax.rsqrt(jnp.var(xf, -1, keepdims=True) + eps)
+    nx = nx.astype(x.dtype)
+    if p is None:  # non-parametric (OLMo)
+        return nx
+    return tp.scale(name, nx, p["g"], p.get("b"))
+
+
+def norm_init(key, d: int, kind: str, dtype=jnp.float32):
+    if kind == "layernorm_np":
+        return None
+    if kind == "layernorm":
+        return {"g": mk(key, (d,), ("embed",), dist="ones", dtype=dtype),
+                "b": mk(key, (d,), ("embed",), dist="zeros", dtype=dtype)}
+    return {"g": mk(key, (d,), ("embed",), dist="ones", dtype=dtype)}
+
+
+def apply_norm(tp, name, p, x, kind: str):
+    if kind in ("layernorm", "layernorm_np"):
+        return layernorm(tp, name, p, x)
+    return rmsnorm(tp, name, p, x)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+
+
+def rope_angles(positions, dim: int, theta: float):
+    """positions (..., T) -> cos/sin (..., T, dim/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (B, T, H, hd); cos/sin (B, T, hd/2) or (T, hd/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    cos, sin = cos.astype(x.dtype), sin.astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+
+
+def per_example_xent(logits, labels, mask=None, vocab_valid: int | None = None):
+    """Per-example mean cross entropy.  logits (B, T, V) fp-any; labels (B, T).
+
+    ``vocab_valid`` masks padded vocabulary rows out of the softmax.
+    """
+    lg = logits.astype(jnp.float32)
+    if vocab_valid is not None and vocab_valid < lg.shape[-1]:
+        neg = jnp.full((lg.shape[-1] - vocab_valid,), -1e30, jnp.float32)
+        lg = lg.at[..., vocab_valid:].set(neg)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll, axis=-1)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m, axis=-1) / jnp.maximum(jnp.sum(m, axis=-1), 1.0)
+
+
+def shard_hidden(x):
+    return shard_act(x, "batch", "seq", "embed")

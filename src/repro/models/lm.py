@@ -1,0 +1,473 @@
+"""Decoder-only language models for all assigned LM families.
+
+One class covers dense / moe / vlm (early-fusion backbone) / ssm (xLSTM) /
+hybrid (Zamba2: Mamba2 + weight-shared attention block).  Training applies
+go through the taps engine so DP per-example gradients cover every
+parameter; serving paths (prefill / decode with KV or recurrent state) use
+a no-op tapper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.tapper import Tapper, scan_with_taps
+from repro.launch.sharding import shard_act
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import ssm as ssmlib
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.models.moe import moe_apply, moe_init
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    # init
+
+    def _attn_init(self, key):
+        c = self.cfg
+        if c.mla:
+            return attn.mla_init(
+                key, c.d_model, c.n_heads, q_lora_rank=c.q_lora_rank,
+                kv_lora_rank=c.kv_lora_rank, qk_nope_dim=c.qk_nope_dim,
+                qk_rope_dim=c.qk_rope_dim, v_head_dim=c.v_head_dim,
+                dtype=c.jdtype)
+        return attn.gqa_init(key, c.d_model, c.n_heads, c.n_kv, c.hd,
+                             qk_norm=c.qk_norm, bias=c.attn_bias,
+                             dtype=c.jdtype)
+
+    def _attn_block_init(self, key):
+        c = self.cfg
+        ks = jax.random.split(key, 4)
+        p = {"attn": self._attn_init(ks[0]),
+             "ln1": cm.norm_init(ks[2], c.d_model, c.norm, c.jdtype),
+             "ln2": cm.norm_init(ks[3], c.d_model, c.norm, c.jdtype)}
+        if c.n_experts:
+            p["moe"] = moe_init(ks[1], c.d_model, c.d_ff, c.n_experts,
+                                n_shared=c.n_shared_experts, dtype=c.jdtype)
+        else:
+            p["mlp"] = mlp_init(ks[1], c.d_model, c.d_ff, c.mlp,
+                                dtype=c.jdtype)
+        return {k: v for k, v in p.items() if v is not None}
+
+    def init(self, key):
+        c = self.cfg
+        ks = jax.random.split(key, 6)
+        tree = {"tok_emb": {"emb": cm.mk(
+            ks[0], (c.padded_vocab, c.d_model), ("vocab", "embed"),
+            scale=0.02, dtype=c.jdtype)}}
+
+        if c.family in ("dense", "moe", "vlm"):
+            tree["blocks"] = cm.stack_layers(ks[1], c.n_layers,
+                                             self._attn_block_init)
+        elif c.family == "ssm":        # xLSTM
+            k_every = c.slstm_every or 0
+            if k_every:
+                n_super = c.n_layers // k_every
+
+                def super_init(k):
+                    k1, k2, k3 = jax.random.split(k, 3)
+                    return {
+                        "m": cm.stack_layers(k1, k_every - 1, lambda kk: {
+                            "blk": ssmlib.mlstm_init(
+                                kk, c.d_model, expand=c.ssm_expand,
+                                d_conv=c.ssm_conv, n_heads=c.n_heads,
+                                dtype=c.jdtype),
+                            "ln": cm.norm_init(kk, c.d_model, c.norm, c.jdtype)}),
+                        "s": {"blk": ssmlib.slstm_init(
+                                  k2, c.d_model, n_heads=c.n_heads,
+                                  dtype=c.jdtype),
+                              "ln": cm.norm_init(k3, c.d_model, c.norm, c.jdtype)},
+                    }
+
+                tree["blocks"] = cm.stack_layers(ks[1], n_super, super_init)
+            else:
+                tree["blocks"] = cm.stack_layers(ks[1], c.n_layers, lambda kk: {
+                    "blk": ssmlib.mlstm_init(
+                        kk, c.d_model, expand=c.ssm_expand, d_conv=c.ssm_conv,
+                        n_heads=c.n_heads, dtype=c.jdtype),
+                    "ln": cm.norm_init(kk, c.d_model, c.norm, c.jdtype)})
+        elif c.family == "hybrid":     # Zamba2
+            n_super = c.n_layers // c.attn_every
+            tree["blocks"] = cm.stack_layers(ks[1], n_super, lambda k: {
+                "mamba": cm.stack_layers(k, c.attn_every, lambda kk: {
+                    "blk": ssmlib.mamba2_init(
+                        kk, c.d_model, d_state=c.ssm_state,
+                        expand=c.ssm_expand, d_conv=c.ssm_conv,
+                        dtype=c.jdtype),
+                    "ln": cm.norm_init(kk, c.d_model, c.norm, c.jdtype)})})
+            k1, k2, k3, k4 = jax.random.split(ks[2], 4)
+            tree["shared"] = {
+                "attn": attn.gqa_init(k1, c.d_model, c.n_heads, c.n_kv, c.hd,
+                                      qk_norm=c.qk_norm, dtype=c.jdtype),
+                "mlp": mlp_init(k2, c.d_model, c.d_ff, c.mlp, dtype=c.jdtype),
+                "ln1": cm.norm_init(k3, c.d_model, c.norm, c.jdtype),
+                "ln2": cm.norm_init(k4, c.d_model, c.norm, c.jdtype)}
+        else:
+            raise ValueError(c.family)
+
+        fn = cm.norm_init(ks[3], c.d_model, c.norm, c.jdtype)
+        if fn is not None:
+            tree["final_norm"] = fn
+        if not c.tie_embeddings:
+            tree["head"] = {"w": cm.mk(ks[4], (c.d_model, c.padded_vocab),
+                                       ("embed", "vocab"), scale=0.02,
+                                       dtype=c.jdtype)}
+        return cm.split_tree(tree)
+
+    # ------------------------------------------------------------------
+    # shared pieces
+
+    def _attn_kw(self, mode="train"):
+        c = self.cfg
+        return dict(n_heads=c.n_heads, n_kv=c.n_kv, head_dim=c.hd,
+                    rope_theta=c.rope_theta, qk_norm=c.qk_norm,
+                    attn_impl=c.attn_impl)
+
+    def _head(self, tp, params, h):
+        c = self.cfg
+        if c.tie_embeddings:
+            return tp.dense("~tok_emb", h, params["tok_emb"]["emb"],
+                            w_transposed=True, param_key="emb")
+        return tp.dense("head", h, params["head"]["w"])
+
+    def _backbone_train(self, params, h, tp: Tapper):
+        c = self.cfg
+        B = h.shape[0]
+        lb0 = jnp.zeros((B,), jnp.float32)
+
+        if c.family in ("dense", "moe", "vlm"):
+            def body(stp, carry, p_l, _):
+                hh, lb = carry
+                hh = cm.shard_hidden(hh)
+                a, _ = attn.gqa_apply(
+                    stp, "attn", p_l["attn"],
+                    cm.apply_norm(stp, "ln1", p_l.get("ln1"), hh, c.norm),
+                    **self._attn_kw()) if not c.mla else attn.mla_apply(
+                    stp, "attn", p_l["attn"],
+                    cm.apply_norm(stp, "ln1", p_l.get("ln1"), hh, c.norm),
+                    n_heads=c.n_heads, q_lora_rank=c.q_lora_rank,
+                    kv_lora_rank=c.kv_lora_rank, qk_nope_dim=c.qk_nope_dim,
+                    qk_rope_dim=c.qk_rope_dim, v_head_dim=c.v_head_dim,
+                    rope_theta=c.rope_theta, attn_impl=c.attn_impl)
+                hh = hh + a
+                x2 = cm.apply_norm(stp, "ln2", p_l.get("ln2"), hh, c.norm)
+                if c.n_experts:
+                    m, lb_l = moe_apply(stp, "moe", p_l["moe"], x2,
+                                        impl=c.moe_impl, n_experts=c.n_experts,
+                                        topk=c.topk,
+                                        capacity_factor=c.capacity_factor)
+                    lb = lb + lb_l
+                else:
+                    m = mlp_apply(stp, "mlp", p_l["mlp"], x2, c.mlp)
+                return (hh + m, lb)
+
+            (h, lb) = scan_with_taps(tp, "blocks", body, (h, lb0),
+                                     params["blocks"], remat=c.remat)
+            return h, lb
+
+        if c.family == "ssm":
+            if c.slstm_every:
+                def body(stp, carry, p_l, _):
+                    hh, lb = carry
+
+                    def mbody(sstp, hhh, pm, _):
+                        z = cm.apply_norm(sstp, "ln", pm.get("ln"), hhh, c.norm)
+                        return hhh + ssmlib.mlstm_apply(
+                            sstp, "blk", pm["blk"], z, expand=c.ssm_expand,
+                            d_conv=c.ssm_conv, n_heads=c.n_heads)
+
+                    hh = scan_with_taps(stp, "m", mbody, hh, p_l["m"])
+                    z = cm.apply_norm(stp, "s/ln", p_l["s"].get("ln"), hh,
+                                      c.norm)
+                    hh = hh + ssmlib.slstm_apply(stp, "s/blk", p_l["s"]["blk"],
+                                                 z, n_heads=c.n_heads)
+                    return (hh, lb)
+            else:
+                def body(stp, carry, p_l, _):
+                    hh, lb = carry
+                    z = cm.apply_norm(stp, "ln", p_l.get("ln"), hh, c.norm)
+                    hh = hh + ssmlib.mlstm_apply(
+                        stp, "blk", p_l["blk"], z, expand=c.ssm_expand,
+                        d_conv=c.ssm_conv, n_heads=c.n_heads)
+                    return (hh, lb)
+
+            (h, lb) = scan_with_taps(tp, "blocks", body, (h, lb0),
+                                     params["blocks"], remat=c.remat)
+            return h, lb
+
+        if c.family == "hybrid":
+            def body(stp, carry, p_l, _, shared):
+                hh, lb = carry
+
+                def mbody(sstp, hhh, pm, _):
+                    z = cm.apply_norm(sstp, "ln", pm.get("ln"), hhh, c.norm)
+                    return hhh + ssmlib.mamba2_apply(
+                        sstp, "blk", pm["blk"], z, d_state=c.ssm_state,
+                        expand=c.ssm_expand, d_conv=c.ssm_conv)
+
+                hh = scan_with_taps(stp, "mamba", mbody, hh, p_l["mamba"])
+                z = cm.apply_norm(stp, "~shared/ln1", shared.get("ln1"), hh,
+                                  c.norm)
+                a, _ = attn.gqa_apply(stp, "~shared/attn", shared["attn"], z,
+                                      window=c.window, **self._attn_kw())
+                hh = hh + a
+                z = cm.apply_norm(stp, "~shared/ln2", shared.get("ln2"), hh,
+                                  c.norm)
+                hh = hh + mlp_apply(stp, "~shared/mlp", shared["mlp"], z,
+                                    c.mlp)
+                return (hh, lb)
+
+            (h, lb) = scan_with_taps(tp, "blocks", body, (h, lb0),
+                                     params["blocks"], remat=c.remat,
+                                     shared_params=params["shared"])
+            return h, lb
+
+        raise ValueError(c.family)
+
+    # ------------------------------------------------------------------
+    # training apply: per-example losses
+
+    def apply(self, params, batch, tp: Tapper):
+        c = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        mask = batch.get("mask")
+        h = tp.embed("tok_emb", params["tok_emb"]["emb"], tokens)
+        h = cm.shard_hidden(h)
+        h, lb = self._backbone_train(params, h, tp)
+        h = cm.apply_norm(tp, "final_norm", params.get("final_norm"), h,
+                          c.norm)
+        logits = self._head(tp, params, h)
+        logits = shard_act(logits, "batch", "seq", "vocab")
+        losses = cm.per_example_xent(logits, labels, mask,
+                                     vocab_valid=c.vocab)
+        if c.n_experts:
+            losses = losses + c.moe_lb_coef * lb / max(c.n_layers, 1)
+        return losses
+
+    # ------------------------------------------------------------------
+    # serving: caches, prefill, decode
+
+    def init_cache(self, batch: int, max_len: int):
+        c = self.cfg
+        dt = c.jdtype
+
+        if c.family in ("dense", "moe", "vlm"):
+            L = c.n_layers
+            if c.mla:
+                one = attn.mla_cache(batch, max_len, c.kv_lora_rank,
+                                     c.qk_rope_dim, dt)
+            else:
+                one = attn.gqa_cache(batch, max_len, c.n_kv, c.hd, dt)
+            one.pop("pos")
+            layers = jax.tree.map(
+                lambda a: jnp.zeros((L,) + a.shape, a.dtype), one)
+            return {"layers": layers, "pos": jnp.zeros((), jnp.int32)}
+
+        if c.family == "ssm":
+            if c.slstm_every:
+                n_super = c.n_layers // c.slstm_every
+                m1 = ssmlib.mlstm_state(batch, c.d_model, expand=c.ssm_expand,
+                                        d_conv=c.ssm_conv, n_heads=c.n_heads,
+                                        dtype=dt)
+                s1 = ssmlib.slstm_state(batch, c.d_model)
+                layers = {
+                    "m": jax.tree.map(lambda a: jnp.zeros(
+                        (n_super, c.slstm_every - 1) + a.shape, a.dtype), m1),
+                    "s": jax.tree.map(lambda a: jnp.zeros(
+                        (n_super,) + a.shape, a.dtype), s1)}
+            else:
+                m1 = ssmlib.mlstm_state(batch, c.d_model, expand=c.ssm_expand,
+                                        d_conv=c.ssm_conv, n_heads=c.n_heads,
+                                        dtype=dt)
+                layers = jax.tree.map(
+                    lambda a: jnp.zeros((c.n_layers,) + a.shape, a.dtype), m1)
+            return {"layers": layers, "pos": jnp.zeros((), jnp.int32)}
+
+        if c.family == "hybrid":
+            n_super = c.n_layers // c.attn_every
+            m1 = ssmlib.mamba2_state(batch, c.d_model, d_state=c.ssm_state,
+                                     expand=c.ssm_expand, d_conv=c.ssm_conv,
+                                     dtype=dt)
+            w = min(max_len, c.window) if c.window else max_len
+            a1 = attn.gqa_cache(batch, w, c.n_kv, c.hd, dt)
+            a1.pop("pos")
+            layers = {
+                "mamba": jax.tree.map(lambda a: jnp.zeros(
+                    (n_super, c.attn_every) + a.shape, a.dtype), m1),
+                "attn": jax.tree.map(lambda a: jnp.zeros(
+                    (n_super,) + a.shape, a.dtype), a1)}
+            return {"layers": layers, "pos": jnp.zeros((), jnp.int32)}
+
+        raise ValueError(c.family)
+
+    def _block_step(self, params_l, cache_l, h, pos, shared=None):
+        """One layer applied to new tokens h (B,T,D) against its cache."""
+        c = self.cfg
+        tp = Tapper()
+        if c.family in ("dense", "moe", "vlm"):
+            cl = dict(cache_l)
+            cl["pos"] = pos
+            z = cm.apply_norm(tp, "ln1", params_l.get("ln1"), h, c.norm)
+            if c.mla:
+                a, nc = attn.mla_apply(
+                    tp, "attn", params_l["attn"], z, n_heads=c.n_heads,
+                    q_lora_rank=c.q_lora_rank, kv_lora_rank=c.kv_lora_rank,
+                    qk_nope_dim=c.qk_nope_dim, qk_rope_dim=c.qk_rope_dim,
+                    v_head_dim=c.v_head_dim, rope_theta=c.rope_theta,
+                    cache=cl, absorbed_decode=c.mla_absorbed_decode)
+            else:
+                a, nc = attn.gqa_apply(tp, "attn", params_l["attn"], z,
+                                       cache=cl, window=0, **self._attn_kw())
+            h = h + a
+            z = cm.apply_norm(tp, "ln2", params_l.get("ln2"), h, c.norm)
+            if c.n_experts:
+                m, _ = moe_apply(tp, "moe", params_l["moe"], z,
+                                 impl=c.moe_impl, n_experts=c.n_experts,
+                                 topk=c.topk,
+                                 capacity_factor=c.capacity_factor)
+            else:
+                m = mlp_apply(tp, "mlp", params_l["mlp"], z, c.mlp)
+            nc.pop("pos")
+            return h + m, nc
+
+        if c.family == "ssm":
+            # h (B,1,D) single-token step
+            x = h[:, 0]
+            if c.slstm_every:
+                def mstep(xx, pm_cm):
+                    pm, cm_ = pm_cm
+                    z = _norm_plain(pm.get("ln"), xx, c.norm)
+                    y, ns = ssmlib.mlstm_step(pm["blk"], cm_, z,
+                                              expand=c.ssm_expand,
+                                              d_conv=c.ssm_conv,
+                                              n_heads=c.n_heads)
+                    return xx + y, ns
+
+                x, ns_m = lax.scan(mstep, x,
+                                   (params_l["m"], cache_l["m"]))
+                z = _norm_plain(params_l["s"].get("ln"), x, c.norm)
+                y, ns_s = ssmlib.slstm_step(params_l["s"]["blk"],
+                                            cache_l["s"], z,
+                                            n_heads=c.n_heads)
+                x = x + y
+                return x[:, None], {"m": ns_m, "s": ns_s}
+            z = _norm_plain(params_l.get("ln"), x, c.norm)
+            y, ns = ssmlib.mlstm_step(params_l["blk"], cache_l, z,
+                                      expand=c.ssm_expand, d_conv=c.ssm_conv,
+                                      n_heads=c.n_heads)
+            return (x + y)[:, None], ns
+
+        if c.family == "hybrid":
+            x = h[:, 0]
+
+            def mstep(xx, pm_cm):
+                pm, cm_ = pm_cm
+                z = _norm_plain(pm.get("ln"), xx, c.norm)
+                y, ns = ssmlib.mamba2_step(pm["blk"], cm_, z,
+                                           d_state=c.ssm_state,
+                                           expand=c.ssm_expand,
+                                           d_conv=c.ssm_conv)
+                return xx + y, ns
+
+            x, ns_m = lax.scan(mstep, x,
+                               (params_l["mamba"], cache_l["mamba"]))
+            hh = x[:, None]
+            cl = dict(cache_l["attn"])
+            cl["pos"] = pos
+            z = _norm_plain3(shared.get("ln1"), hh, c.norm)
+            a, nc = attn.gqa_apply(Tapper(), "attn", shared["attn"], z,
+                                   cache=cl, window=c.window,
+                                   **self._attn_kw())
+            hh = hh + a
+            z = _norm_plain3(shared.get("ln2"), hh, c.norm)
+            hh = hh + mlp_apply(Tapper(), "mlp", shared["mlp"], z, c.mlp)
+            nc.pop("pos")
+            return hh, {"mamba": ns_m, "attn": nc}
+
+        raise ValueError(c.family)
+
+    def decode_step(self, params, cache, tokens):
+        """tokens (B,) -> (logits (B, V), new cache)."""
+        c = self.cfg
+        h = params["tok_emb"]["emb"][tokens][:, None, :]   # (B,1,D)
+        pos = cache["pos"]
+        shared = params.get("shared")
+
+        def body(hh, xs):
+            p_l, c_l = xs
+            hh, nc = self._block_step(p_l, c_l, hh, pos, shared)
+            return hh, nc
+
+        h, new_layers = lax.scan(body, h, (params["blocks"], cache["layers"]))
+        tp = Tapper()
+        h = cm.apply_norm(tp, "fn", params.get("final_norm"), h, c.norm)
+        logits = self._head(tp, params, h)[:, 0]
+        return logits, {"layers": new_layers, "pos": pos + 1}
+
+    def prefill(self, params, tokens, max_len: int):
+        """tokens (B, T_prompt) -> (last-token logits, cache)."""
+        c = self.cfg
+        B, T = tokens.shape
+        cache = self.init_cache(B, max_len)
+        if c.family in ("dense", "moe", "vlm"):
+            h = params["tok_emb"]["emb"][tokens]
+            pos = cache["pos"]
+            shared = params.get("shared")
+
+            def body(hh, xs):
+                p_l, c_l = xs
+                hh, nc = self._block_step(p_l, c_l, hh, pos, shared)
+                return hh, nc
+
+            h, new_layers = lax.scan(body, h,
+                                     (params["blocks"], cache["layers"]))
+            tp = Tapper()
+            if c.prefill_last_only:
+                # Head matmul on the last position only: the (T, V) logits
+                # tensor (and its vocab-TP collective) drops to (1, V).
+                h = h[:, -1:]
+            h = cm.apply_norm(tp, "fn", params.get("final_norm"), h, c.norm)
+            logits = self._head(tp, params, h)[:, -1]
+            return logits, {"layers": new_layers,
+                            "pos": pos + T}
+        # recurrent families: sequential prefill via decode steps
+        def step(carry, tok_t):
+            cch = carry
+            logits, cch = self.decode_step(params, cch, tok_t)
+            return cch, logits
+
+        cache, logits_all = lax.scan(step, cache, jnp.moveaxis(tokens, 1, 0))
+        return logits_all[-1], cache
+
+    # ------------------------------------------------------------------
+    # dry-run input specs
+
+    def train_input_specs(self, shape: ShapeSpec):
+        B, T = shape.global_batch, shape.seq_len
+        return {"tokens": jax.ShapeDtypeStruct((B, T), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+
+    def decode_input_specs(self, shape: ShapeSpec):
+        B, S = shape.global_batch, shape.seq_len
+        cache = jax.eval_shape(lambda: self.init_cache(B, S))
+        return {"cache": cache,
+                "tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}
+
+    def prefill_input_specs(self, shape: ShapeSpec):
+        B, S = shape.global_batch, shape.seq_len
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def _norm_plain(p, x, kind):
+    """Norm on (B, D) without taps (decode paths)."""
+    return cm.apply_norm(Tapper(), "n", p, x, kind)
+
+
+def _norm_plain3(p, x, kind):
+    return cm.apply_norm(Tapper(), "n", p, x, kind)

@@ -1,0 +1,40 @@
+"""Feed-forward blocks: SwiGLU and GeLU MLPs (tapped)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tapper import Tapper
+from repro.launch.sharding import shard_act
+from repro.models import common as cm
+
+
+def mlp_init(key, d_model, d_ff, kind="swiglu", *, bias=False,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {}
+    if kind == "swiglu":
+        p["w_gate"] = {"w": cm.mk(ks[0], (d_model, d_ff), ("embed", "mlp"),
+                                  dtype=dtype)}
+    p["w_up"] = {"w": cm.mk(ks[1], (d_model, d_ff), ("embed", "mlp"),
+                            dtype=dtype)}
+    p["w_down"] = {"w": cm.mk(ks[2], (d_ff, d_model), ("mlp", "embed"),
+                              dtype=dtype)}
+    if bias:
+        p["w_up"]["b"] = cm.mk(ks[1], (d_ff,), ("mlp",), dist="zeros",
+                               dtype=dtype)
+        p["w_down"]["b"] = cm.mk(ks[2], (d_model,), ("embed",), dist="zeros",
+                                 dtype=dtype)
+    return p
+
+
+def mlp_apply(tp: Tapper, name: str, p, x, kind="swiglu"):
+    up = tp.dense(f"{name}/w_up", x, p["w_up"]["w"], p["w_up"].get("b"))
+    up = shard_act(up, "batch", "seq", "mlp")
+    if kind == "swiglu":
+        gate = tp.dense(f"{name}/w_gate", x, p["w_gate"]["w"])
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return tp.dense(f"{name}/w_down", h, p["w_down"]["w"],
+                    p["w_down"].get("b"))

@@ -1,0 +1,17 @@
+"""Model registry: config -> model object."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm", "ssm", "hybrid"):
+        from repro.models.lm import TransformerLM
+        return TransformerLM(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    if cfg.family == "cnn":
+        from repro.models.cnn import CNN
+        return CNN(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,365 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM, sLSTM).
+
+Per-example gradient coverage: all projections (in/out, conv, gates, qkv)
+are tapped denses/convs; the few parameters living *inside* the recurrence
+(Mamba2's A_log/dt_bias/D, sLSTM's recurrent R and gate biases) go through
+the generic ``local_vjp`` kind — the layer-local VJP is re-run per example
+under vmap, which is cheap because those parameter counts are tiny.
+
+Decode paths (``*_step``) carry explicit recurrent state and need no taps.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.tapper import Tapper
+from repro.models import common as cm
+from repro.models.mlp import mlp_apply, mlp_init
+
+HEADDIM = 64
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD): h_t = exp(dt·A) h_{t-1} + dt·(x_t ⊗ B_t);  y_t = h_t·C_t + D·x_t
+
+
+def _ssd_scan(params, xh, Bm, Cm, dt_raw):
+    """xh (B,T,nh,hd); Bm/Cm (B,T,ds); dt_raw (B,T,nh) -> y (B,T,nh,hd)."""
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))            # (nh,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,T,nh)
+    decay = jnp.exp(dt * A)                                       # (B,T,nh)
+    B_, T = xh.shape[0], xh.shape[1]
+    nh, hd = xh.shape[2], xh.shape[3]
+    ds = Bm.shape[-1]
+
+    def step(h, inp):
+        x_t, b_t, c_t, dec_t, dt_t = inp
+        # h (B,nh,hd,ds)
+        h = dec_t[:, :, None, None] * h + \
+            (dt_t[:, :, None] * x_t)[..., None] * b_t[:, None, None, :]
+        y = jnp.einsum("bnhs,bs->bnh", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((B_, nh, hd, ds), jnp.float32)
+    xs = (jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(decay, 1, 0), jnp.moveaxis(dt, 1, 0))
+    _, ys = lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                                    # (B,T,nh,hd)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    return y.astype(xh.dtype)
+
+
+def mamba2_init(key, d_model, *, d_state, expand=2, d_conv=4,
+                dtype=jnp.float32):
+    di = expand * d_model
+    nh = di // HEADDIM
+    conv_dim = di + 2 * d_state
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": {"w": cm.mk(ks[0], (d_model,
+                                       2 * di + 2 * d_state + nh),
+                               ("embed", "mlp"), dtype=dtype)},
+        "conv": {"w": cm.mk(ks[1], (conv_dim, 1, d_conv),
+                            ("mlp", None, "conv_k"),
+                            scale=1.0 / math.sqrt(d_conv), dtype=dtype),
+                 "b": cm.mk(ks[2], (conv_dim,), ("mlp",), dist="zeros",
+                            dtype=dtype)},
+        "ssd": {"A_log": cm.mk(ks[3], (nh,), (None,), dist="zeros",
+                               dtype=jnp.float32),
+                "dt_bias": cm.mk(ks[4], (nh,), (None,), dist="zeros",
+                                 dtype=jnp.float32),
+                "D": cm.mk(ks[5], (nh,), (None,), dist="ones",
+                           dtype=jnp.float32)},
+        "norm": {"g": cm.mk(ks[3], (di,), ("mlp",), dist="ones", dtype=dtype)},
+        "out_proj": {"w": cm.mk(ks[5], (di, d_model), ("mlp", "embed"),
+                                dtype=dtype)},
+    }
+
+
+def mamba2_apply(tp: Tapper, name: str, p, x, *, d_state, expand=2, d_conv=4):
+    B, T, D = x.shape
+    di = expand * D
+    nh = di // HEADDIM
+    zxbcdt = tp.dense(f"{name}/in_proj", x, p["in_proj"]["w"])
+    z, xc, Bm, Cm, dt_raw = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + d_state, 2 * di + 2 * d_state], axis=-1)
+
+    # causal depthwise conv over time on (xc, B, C)
+    conv_in = jnp.concatenate([xc, Bm, Cm], -1)          # (B,T,conv_dim)
+    conv_dim = conv_in.shape[-1]
+    ci = jnp.moveaxis(conv_in, 1, 2)                      # (B,conv_dim,T)
+    ci = jnp.pad(ci, ((0, 0), (0, 0), (d_conv - 1, 0)))
+    co = tp.conv(f"{name}/conv", ci, p["conv"]["w"], p["conv"]["b"],
+                 groups=conv_dim)
+    co = jax.nn.silu(jnp.moveaxis(co, 1, 2))              # (B,T,conv_dim)
+    xc, Bm, Cm = jnp.split(co, [di, di + d_state], axis=-1)
+
+    xh = xc.reshape(B, T, nh, HEADDIM)
+    y = tp.local_vjp(f"{name}/ssd", _ssd_scan, p["ssd"], xh, Bm, Cm, dt_raw)
+    y = y.reshape(B, T, di)
+    y = cm.rmsnorm(tp, f"{name}/norm", p["norm"], y * jax.nn.silu(z))
+    return tp.dense(f"{name}/out_proj", y, p["out_proj"]["w"])
+
+
+def mamba2_state(batch, d_model, *, d_state, expand=2, d_conv=4,
+                 dtype=jnp.float32):
+    di = expand * d_model
+    nh = di // HEADDIM
+    conv_dim = di + 2 * d_state
+    return {"h": jnp.zeros((batch, nh, HEADDIM, d_state), jnp.float32),
+            "conv": jnp.zeros((batch, conv_dim, d_conv - 1), dtype)}
+
+
+def mamba2_step(p, state, x_t, *, d_state, expand=2, d_conv=4):
+    """x_t (B, D) -> (y_t, state).  O(1) per token."""
+    B, D = x_t.shape
+    di = expand * D
+    nh = di // HEADDIM
+    zxbcdt = x_t @ p["in_proj"]["w"]
+    z, xc, Bm, Cm, dt_raw = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + d_state, 2 * di + 2 * d_state], axis=-1)
+    conv_in = jnp.concatenate([xc, Bm, Cm], -1)           # (B,conv_dim)
+    hist = jnp.concatenate([state["conv"], conv_in[:, :, None]], -1)
+    w = p["conv"]["w"][:, 0, :]                            # (conv_dim,K)
+    co = jnp.einsum("bck,ck->bc", hist, w) + p["conv"]["b"]
+    co = jax.nn.silu(co)
+    xc, Bm, Cm = jnp.split(co, [di, di + d_state], axis=-1)
+    xh = xc.reshape(B, nh, HEADDIM).astype(jnp.float32)
+    A = -jnp.exp(p["ssd"]["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["ssd"]["dt_bias"])
+    dec = jnp.exp(dt * A)
+    h = dec[:, :, None, None] * state["h"] + \
+        (dt[:, :, None] * xh)[..., None] * Bm.astype(jnp.float32)[:, None, None, :]
+    y = jnp.einsum("bnhs,bs->bnh", h, Cm.astype(jnp.float32))
+    y = y + p["ssd"]["D"][None, :, None] * xh
+    y = y.reshape(B, di).astype(x_t.dtype)
+    # gated rmsnorm
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         ).astype(y.dtype) * p["norm"]["g"]
+    y = y @ p["out_proj"]["w"]
+    new_conv = hist[:, :, 1:]
+    return y, {"h": h, "conv": new_conv.astype(state["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM — mLSTM (matrix memory, parallelizable) & sLSTM (scalar memory,
+# recurrent weights)
+
+
+def mlstm_init(key, d_model, *, expand=2, d_conv=4, n_heads=4,
+               dtype=jnp.float32):
+    di = expand * d_model
+    ks = jax.random.split(key, 9)
+    return {
+        "up": {"w": cm.mk(ks[0], (d_model, 2 * di), ("embed", "mlp"),
+                          dtype=dtype)},
+        "conv": {"w": cm.mk(ks[1], (di, 1, d_conv), ("mlp", None, "conv_k"),
+                            scale=1.0 / math.sqrt(d_conv), dtype=dtype),
+                 "b": cm.mk(ks[2], (di,), ("mlp",), dist="zeros", dtype=dtype)},
+        "wq": {"w": cm.mk(ks[3], (di, di), ("mlp", "heads"), dtype=dtype)},
+        "wk": {"w": cm.mk(ks[4], (di, di), ("mlp", "heads"), dtype=dtype)},
+        "wv": {"w": cm.mk(ks[5], (di, di), ("mlp", "heads"), dtype=dtype)},
+        "wif": {"w": cm.mk(ks[6], (di, 2 * n_heads), ("mlp", None),
+                           scale=0.1, dtype=dtype),
+                "b": cm.mk(ks[7], (2 * n_heads,), (None,), dist="zeros",
+                           dtype=dtype)},
+        "norm": {"g": cm.mk(ks[7], (di,), ("mlp",), dist="ones", dtype=dtype)},
+        "down": {"w": cm.mk(ks[8], (di, d_model), ("mlp", "embed"),
+                            dtype=dtype)},
+    }
+
+
+def _mlstm_scan(q, k, v, i_pre, f_pre):
+    """Stabilized mLSTM recurrence.  q,k,v (B,T,H,hd); gates (B,T,H)."""
+    B, T, H, hd = q.shape
+
+    def step(carry, inp):
+        C, n, m = carry                     # C (B,H,hd,hd), n (B,H,hd), m (B,H)
+        qt, kt, vt, it, ft = inp
+        logf = -jax.nn.softplus(-ft)        # log sigmoid(f)
+        m_new = jnp.maximum(logf + m, it)
+        fg = jnp.exp(logf + m - m_new)
+        ig = jnp.exp(it - m_new)
+        C = fg[..., None, None] * C + ig[..., None, None] * \
+            (kt[..., :, None] * vt[..., None, :])
+        n = fg[..., None] * n + ig[..., None] * kt
+        num = jnp.einsum("bhkv,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0)
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    init = (jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32),
+            jnp.zeros((B, H), jnp.float32))
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (q, k, v, i_pre, f_pre))
+    _, hs = lax.scan(step, init, xs)
+    return jnp.moveaxis(hs, 0, 1)           # (B,T,H,hd)
+
+
+def mlstm_apply(tp: Tapper, name: str, p, x, *, expand=2, d_conv=4,
+                n_heads=4):
+    B, T, D = x.shape
+    di = expand * D
+    hd = di // n_heads
+    up = tp.dense(f"{name}/up", x, p["up"]["w"])
+    xin, z = jnp.split(up, 2, -1)
+    ci = jnp.moveaxis(xin, 1, 2)
+    ci = jnp.pad(ci, ((0, 0), (0, 0), (d_conv - 1, 0)))
+    co = tp.conv(f"{name}/conv", ci, p["conv"]["w"], p["conv"]["b"],
+                 groups=di)
+    xc = jax.nn.silu(jnp.moveaxis(co, 1, 2))
+    q = tp.dense(f"{name}/wq", xc, p["wq"]["w"]).reshape(B, T, n_heads, hd)
+    k = tp.dense(f"{name}/wk", xc, p["wk"]["w"]).reshape(B, T, n_heads, hd)
+    k = k / math.sqrt(hd)
+    v = tp.dense(f"{name}/wv", xin, p["wv"]["w"]).reshape(B, T, n_heads, hd)
+    gates = tp.dense(f"{name}/wif", xin, p["wif"]["w"], p["wif"]["b"])
+    i_pre, f_pre = jnp.split(gates, 2, -1)
+    h = _mlstm_scan(q, k, v, i_pre, f_pre).reshape(B, T, di).astype(x.dtype)
+    h = cm.rmsnorm(tp, f"{name}/norm", p["norm"], h) * jax.nn.silu(z)
+    return tp.dense(f"{name}/down", h, p["down"]["w"])
+
+
+def mlstm_state(batch, d_model, *, expand=2, d_conv=4, n_heads=4,
+                dtype=jnp.float32):
+    di = expand * d_model
+    hd = di // n_heads
+    return {"C": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+            "m": jnp.zeros((batch, n_heads), jnp.float32),
+            "conv": jnp.zeros((batch, di, d_conv - 1), dtype)}
+
+
+def mlstm_step(p, state, x_t, *, expand=2, d_conv=4, n_heads=4):
+    B, D = x_t.shape
+    di = expand * D
+    hd = di // n_heads
+    up = x_t @ p["up"]["w"]
+    xin, z = jnp.split(up, 2, -1)
+    hist = jnp.concatenate([state["conv"], xin[:, :, None]], -1)
+    w = p["conv"]["w"][:, 0, :]
+    xc = jax.nn.silu(jnp.einsum("bck,ck->bc", hist, w) + p["conv"]["b"])
+    q = (xc @ p["wq"]["w"]).reshape(B, n_heads, hd).astype(jnp.float32)
+    k = (xc @ p["wk"]["w"]).reshape(B, n_heads, hd).astype(jnp.float32)
+    k = k / math.sqrt(hd)
+    v = (xin @ p["wv"]["w"]).reshape(B, n_heads, hd).astype(jnp.float32)
+    gates = (xin @ p["wif"]["w"] + p["wif"]["b"]).astype(jnp.float32)
+    it, ft = jnp.split(gates, 2, -1)
+    logf = -jax.nn.softplus(-ft)
+    m_new = jnp.maximum(logf + state["m"], it)
+    fg = jnp.exp(logf + state["m"] - m_new)
+    ig = jnp.exp(it - m_new)
+    C = fg[..., None, None] * state["C"] + ig[..., None, None] * \
+        (k[..., :, None] * v[..., None, :])
+    n = fg[..., None] * state["n"] + ig[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h = (num / den[..., None]).reshape(B, di).astype(x_t.dtype)
+    hf = h.astype(jnp.float32)
+    h = (hf * jax.lax.rsqrt(jnp.mean(hf * hf, -1, keepdims=True) + 1e-6)
+         ).astype(h.dtype) * p["norm"]["g"] * jax.nn.silu(z)
+    y = h @ p["down"]["w"]
+    return y, {"C": C, "n": n, "m": m_new,
+               "conv": hist[:, :, 1:].astype(state["conv"].dtype)}
+
+
+# -- sLSTM ------------------------------------------------------------------
+
+
+def slstm_init(key, d_model, *, n_heads=4, dtype=jnp.float32):
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wx": {"w": cm.mk(ks[0], (d_model, 4 * d_model), ("embed", "mlp"),
+                          dtype=dtype)},
+        "rec": {"R": cm.mk(ks[1], (4, n_heads, hd, hd), (None, "heads",
+                                                         None, None),
+                           scale=0.3 / math.sqrt(hd), dtype=jnp.float32),
+                "b": cm.mk(ks[2], (4, d_model), (None, "embed"),
+                           dist="zeros", dtype=jnp.float32)},
+        "norm": {"g": cm.mk(ks[2], (d_model,), ("embed",), dist="ones",
+                            dtype=dtype)},
+        "ffn": mlp_init(ks[3], d_model, int(d_model * 4 / 3) // 8 * 8,
+                        "swiglu", dtype=dtype),
+    }
+
+
+def _slstm_scan(params, gx):
+    """gx (B,T,4,D) gate pre-activations from the input side.
+    Recurrence: g = gx_t + R h_{t-1} + b, stabilized scalar memory."""
+    R, bias = params["R"], params["b"]          # (4,H,hd,hd), (4,D)
+    B, T, _, D = gx.shape
+    H = R.shape[1]
+    hd = D // H
+
+    def step(carry, gx_t):
+        c, n, h, m = carry                       # (B,D) each; m (B,D)
+        hh = h.reshape(B, H, hd)
+        rec = jnp.einsum("ghkv,bhk->gbhv", R, hh).reshape(4, B, D)
+        g = gx_t.astype(jnp.float32).transpose(1, 0, 2) + rec \
+            + bias[:, None, :]
+        i_, f_, z_, o_ = g[0], g[1], g[2], g[3]
+        logf = -jax.nn.softplus(-f_)
+        m_new = jnp.maximum(logf + m, i_)
+        ig = jnp.exp(i_ - m_new)
+        fg = jnp.exp(logf + m - m_new)
+        c = fg * c + ig * jnp.tanh(z_)
+        n = fg * n + ig
+        h = jax.nn.sigmoid(o_) * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    zeros = jnp.zeros((B, D), jnp.float32)
+    init = (zeros, zeros, zeros, zeros)
+    _, hs = lax.scan(step, init, jnp.moveaxis(gx, 1, 0))
+    return jnp.moveaxis(hs, 0, 1).astype(gx.dtype)   # (B,T,D)
+
+
+def slstm_apply(tp: Tapper, name: str, p, x, *, n_heads=4):
+    B, T, D = x.shape
+    gx = tp.dense(f"{name}/wx", x, p["wx"]["w"]).reshape(B, T, 4, D)
+    h = tp.local_vjp(f"{name}/rec", _slstm_scan, p["rec"], gx)
+    h = cm.rmsnorm(tp, f"{name}/norm", p["norm"], h)
+    return mlp_apply(tp, f"{name}/ffn", p["ffn"], h, "swiglu")
+
+
+def slstm_state(batch, d_model, dtype=jnp.float32):
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def slstm_step(p, state, x_t, *, n_heads=4):
+    B, D = x_t.shape
+    H = p["rec"]["R"].shape[1]
+    hd = D // H
+    gx = (x_t @ p["wx"]["w"]).reshape(B, 4, D)
+    hh = state["h"].reshape(B, H, hd)
+    rec = jnp.einsum("ghkv,bhk->gbhv", p["rec"]["R"], hh).reshape(4, B, D)
+    g = gx.astype(jnp.float32).transpose(1, 0, 2) + rec \
+        + p["rec"]["b"][:, None, :]
+    i_, f_, z_, o_ = g[0], g[1], g[2], g[3]
+    logf = -jax.nn.softplus(-f_)
+    m_new = jnp.maximum(logf + state["m"], i_)
+    ig = jnp.exp(i_ - m_new)
+    fg = jnp.exp(logf + state["m"] - m_new)
+    c = fg * state["c"] + ig * jnp.tanh(z_)
+    n = fg * state["n"] + ig
+    h = jax.nn.sigmoid(o_) * c / jnp.maximum(n, 1.0)
+    hd_ = h.astype(x_t.dtype)
+    nf = hd_.astype(jnp.float32)
+    hn = (nf * jax.lax.rsqrt(jnp.mean(nf * nf, -1, keepdims=True) + 1e-6)
+          ).astype(x_t.dtype) * p["norm"]["g"]
+    # ffn (plain, no taps on the decode path)
+    gate = hn @ p["ffn"]["w_gate"]["w"]
+    upv = hn @ p["ffn"]["w_up"]["w"]
+    y = (jax.nn.silu(gate) * upv) @ p["ffn"]["w_down"]["w"]
+    return y, {"c": c, "n": n, "h": h, "m": m_new}

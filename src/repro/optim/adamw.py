@@ -1,0 +1,73 @@
+"""Optimizers (pure functions over pytrees).
+
+Moments are float32 regardless of parameter dtype; updates are computed in
+float32 and cast back (bf16 params keep a de-facto fp32 master through the
+fp32 moments + fp32 arithmetic — a full master copy is a config away but
+doubles state).  Under pjit the states inherit the parameter shardings, so
+with FSDP-sharded parameters this *is* ZeRO: every state shard lives
+exactly once across the mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, *, lr=1e-4, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return newp, m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+def sgdm_init(params):
+    return {"mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def sgdm_update(grads, state, params, *, lr=0.1, momentum=0.9,
+                weight_decay=0.0):
+    def upd(g, mo, p):
+        g = g.astype(jnp.float32)
+        if weight_decay:
+            g = g + weight_decay * p.astype(jnp.float32)
+        mo = momentum * mo + g
+        return (p.astype(jnp.float32) - lr * mo).astype(p.dtype), mo
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["mom"])
+    out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+    return (treedef.unflatten([o[0] for o in out]),
+            {"mom": treedef.unflatten([o[1] for o in out]),
+             "step": state["step"] + 1})

@@ -1,0 +1,6 @@
+from repro.runtime.fault import ChaosMonkey, WorkerFailure, run_with_restarts
+from repro.runtime.monitor import StepMonitor
+from repro.runtime.elastic import elastic_data_degree
+
+__all__ = ["ChaosMonkey", "WorkerFailure", "run_with_restarts",
+           "StepMonitor", "elastic_data_degree"]

@@ -1,0 +1,21 @@
+"""Elastic scaling: recompute parallelism after membership changes.
+
+Checkpoints are mesh-agnostic (see checkpointer), so elastic rescale is:
+pick the new data-parallel degree that keeps the global batch divisible,
+rebuild the mesh, restore onto the new shardings, and continue — the only
+state that changes is the per-replica batch slice.
+"""
+from __future__ import annotations
+
+
+def elastic_data_degree(n_devices: int, model_par: int, global_batch: int,
+                        microbatches: int = 1) -> int:
+    """Largest data-parallel degree usable with the surviving devices."""
+    if n_devices < model_par:
+        raise ValueError(
+            f"cannot keep model_par={model_par} with {n_devices} devices")
+    data = n_devices // model_par
+    micro_global = global_batch // microbatches
+    while data > 1 and micro_global % data != 0:
+        data -= 1
+    return data

@@ -1,0 +1,53 @@
+"""Fault tolerance: restart-from-checkpoint orchestration.
+
+At thousand-node scale the failure model is "some host dies every few
+hours"; the recovery contract is (1) checkpoints are atomic and frequent,
+(2) the training loop is a pure function of (state, step), so recovery =
+reload latest state and replay the deterministic data stream from there.
+``run_with_restarts`` implements that loop; ``ChaosMonkey`` injects
+failures for tests and drills.
+"""
+from __future__ import annotations
+
+import logging
+import time
+
+log = logging.getLogger("repro.runtime")
+
+
+class WorkerFailure(RuntimeError):
+    """Simulated/propagated node failure."""
+
+
+class ChaosMonkey:
+    def __init__(self, fail_at_steps=(), seed: int = 0, p: float = 0.0):
+        self.fail_at = set(fail_at_steps)
+        self.p = p
+        import random
+        self._rng = random.Random(seed)
+        self.tripped = 0
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at or (self.p and self._rng.random() < self.p):
+            self.fail_at.discard(step)
+            self.tripped += 1
+            raise WorkerFailure(f"injected failure at step {step}")
+
+
+def run_with_restarts(train_segment, *, max_restarts: int = 3,
+                      backoff_s: float = 0.0):
+    """``train_segment(restart_count) -> result`` runs until completion or
+    raises; on failure we restart (the segment is responsible for restoring
+    from its checkpointer).  Returns (result, restarts_used)."""
+    restarts = 0
+    while True:
+        try:
+            return train_segment(restarts), restarts
+        except WorkerFailure as e:
+            restarts += 1
+            log.warning("worker failure: %s (restart %d/%d)", e, restarts,
+                        max_restarts)
+            if restarts > max_restarts:
+                raise
+            if backoff_s:
+                time.sleep(backoff_s)

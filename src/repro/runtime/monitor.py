@@ -1,0 +1,39 @@
+"""Step-time monitoring + straggler detection."""
+from __future__ import annotations
+
+import time
+
+
+class StepMonitor:
+    """EMA of step wall-time; flags stragglers (steps slower than
+    ``threshold``× the EMA).  On a real cluster each host reports its step
+    time through a heartbeat store and the controller compares across
+    hosts; here the same logic runs per process and is unit-tested."""
+
+    def __init__(self, alpha: float = 0.1, threshold: float = 3.0):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.ema: float | None = None
+        self.stragglers: list[tuple[int, float]] = []
+        self._t0: float | None = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> float:
+        dt = time.perf_counter() - self._t0
+        self.observe(step, dt)
+        return dt
+
+    def observe(self, step: int, dt: float):
+        if self.ema is None:
+            self.ema = dt
+            return
+        if dt > self.threshold * self.ema:
+            # flagged steps do not poison the EMA baseline
+            self.stragglers.append((step, dt))
+            return
+        self.ema = (1 - self.alpha) * self.ema + self.alpha * dt
+
+    def is_straggler(self, dt: float) -> bool:
+        return self.ema is not None and dt > self.threshold * self.ema

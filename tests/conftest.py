@@ -1,0 +1,67 @@
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tapper import Tapper, scan_with_taps
+
+
+@pytest.fixture(scope="session")
+def toy_model():
+    """Small mixed model: conv + embedding + scanned dense blocks + affine
+    norms + head.  Exercises every built-in layer kind except MoE/SSM."""
+    rng = np.random.RandomState(0)
+    B, C, H, W = 4, 3, 12, 12
+    V, T, D, L = 11, 6, 8, 3
+
+    params = {
+        "conv1": {"w": jnp.array(rng.randn(5, C, 3, 3) * 0.2, jnp.float32),
+                  "b": jnp.array(rng.randn(5) * 0.1, jnp.float32)},
+        "emb": {"emb": jnp.array(rng.randn(V, D) * 0.3, jnp.float32)},
+        "blocks": {"fc": {"w": jnp.array(rng.randn(L, D, D) * 0.3,
+                                         jnp.float32),
+                          "b": jnp.array(rng.randn(L, D) * 0.1, jnp.float32)},
+                   "nrm": {"g": jnp.ones((L, D)), "b": jnp.zeros((L, D))}},
+        "head": {"w": jnp.array(rng.randn(125 + D, 7) * 0.2, jnp.float32)},
+    }
+
+    def apply_fn(params, batch, tp: Tapper):
+        img, ids, y = batch["img"], batch["ids"], batch["label"]
+        h = tp.conv("conv1", img, params["conv1"]["w"], params["conv1"]["b"],
+                    stride=2, padding=1)
+        h = jax.nn.relu(h)
+        h = h.reshape(h.shape[0], -1)[:, :125]
+        e = tp.embed("emb", params["emb"]["emb"], ids)
+
+        def block(stp, carry, p_l, _):
+            x = stp.dense("fc", carry, p_l["fc"]["w"], p_l["fc"]["b"])
+            x = jax.nn.gelu(x)
+            mu = jnp.mean(x, -1, keepdims=True)
+            x = (x - mu) / jnp.sqrt(jnp.var(x, -1, keepdims=True) + 1e-5)
+            x = stp.scale("nrm", x, p_l["nrm"]["g"], p_l["nrm"]["b"])
+            return x
+
+        e = scan_with_taps(tp, "blocks", block, e, params["blocks"])
+        feat = jnp.concatenate([h, e.mean(axis=1)], axis=-1)
+        logits = tp.dense("head", feat, params["head"]["w"])
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, y[:, None], 1)[:, 0]
+
+    batch = {
+        "img": jnp.array(rng.randn(B, C, H, W), jnp.float32),
+        "ids": jnp.array(rng.randint(0, V, (B, T))),
+        "label": jnp.array(rng.randint(0, 7, (B,))),
+    }
+    return apply_fn, params, batch
+
+
+def tree_maxdiff(a, b):
+    return max(float(jnp.abs(x - y).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def true_norms_sq(pe_grads):
+    B = jax.tree.leaves(pe_grads)[0].shape[0]
+    return sum(jnp.sum(l.reshape(B, -1).astype(jnp.float32) ** 2, axis=1)
+               for l in jax.tree.leaves(pe_grads))

@@ -1,0 +1,48 @@
+"""Ghost/bk exactness on the structurally hard architectures: tied
+embeddings (cross term), MoE segmented experts, SSM local-VJP params,
+Zamba's weight-shared attention block."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import tree_maxdiff, true_norms_sq
+from repro.configs import get_config
+from repro.core import clipped_grad_sum, ghost_norms, per_example_grads
+from repro.models.registry import build_model
+
+ARCHS = ["olmo-1b", "granite-moe-1b-a400m", "xlstm-125m", "zamba2-2.7b",
+         "deepseek-v3-671b"]
+B, T = 3, 8
+
+
+def _setup(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(1)
+    batch = {"tokens": jnp.array(rng.randint(0, cfg.vocab, (B, T))),
+             "labels": jnp.array(rng.randint(0, cfg.vocab, (B, T)))}
+    return model, params, batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_ghost_norms_exact(arch):
+    model, params, batch = _setup(arch)
+    _, pe = per_example_grads(model.apply, params, batch, "naive")
+    want = true_norms_sq(pe)
+    _, got, _ = ghost_norms(model.apply, params, batch)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("strategy", ["ghost", "bk"])
+def test_clipped_grads_exact(arch, strategy):
+    model, params, batch = _setup(arch)
+    _, ref, nref = clipped_grad_sum(model.apply, params, batch, l2_clip=1.0,
+                                    strategy="naive")
+    _, got, _ = clipped_grad_sum(model.apply, params, batch, l2_clip=1.0,
+                                 strategy=strategy)
+    scale = max(float(jnp.abs(x).max()) for x in jax.tree.leaves(ref))
+    assert tree_maxdiff(got, ref) < 5e-5 * max(scale, 1.0)

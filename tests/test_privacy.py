@@ -1,0 +1,64 @@
+"""RDP accountant sanity + closed-form checks."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.privacy import (DEFAULT_ORDERS, PrivacyAccountant,
+                                eps_from_rdp, rdp_subsampled_gaussian)
+
+
+def test_full_batch_closed_form():
+    """q=1: RDP(alpha) = alpha / (2 sigma^2) exactly."""
+    sigma = 1.3
+    rdp = rdp_subsampled_gaussian(1.0, sigma, orders=(2, 4, 8))
+    np.testing.assert_allclose(rdp, [a / (2 * sigma ** 2) for a in (2, 4, 8)])
+
+
+def test_eps_monotone_in_steps():
+    acct = PrivacyAccountant(sampling_rate=0.01, noise_multiplier=1.1)
+    es = []
+    for _ in range(3):
+        acct.step(500)
+        es.append(acct.epsilon(1e-5))
+    assert es[0] < es[1] < es[2]
+
+
+def test_eps_decreasing_in_sigma():
+    out = []
+    for sigma in (0.8, 1.2, 2.0):
+        a = PrivacyAccountant(0.01, sigma)
+        a.step(1000)
+        out.append(a.epsilon(1e-5))
+    assert out[0] > out[1] > out[2]
+
+
+def test_eps_increasing_in_q():
+    out = []
+    for q in (0.001, 0.01, 0.1):
+        a = PrivacyAccountant(q, 1.1)
+        a.step(1000)
+        out.append(a.epsilon(1e-5))
+    assert out[0] < out[1] < out[2]
+
+
+def test_reference_regime():
+    """Abadi-style regime: q=0.01, sigma=1.0 should give single-digit eps
+    after ~1e4 steps at delta=1e-5 (ballpark from the DP-SGD literature)."""
+    a = PrivacyAccountant(0.01, 1.0)
+    a.step(10000)
+    eps = a.epsilon(1e-5)
+    assert 1.0 < eps < 10.0
+
+
+def test_zero_noise_is_infinite():
+    a = PrivacyAccountant(0.01, 0.0)
+    a.step(1)
+    assert math.isinf(a.epsilon())
+
+
+def test_subsampling_amplifies():
+    """RDP with q<1 must be (much) smaller than unsampled at same sigma."""
+    full = rdp_subsampled_gaussian(1.0, 1.0, orders=(8,))[0]
+    sub = rdp_subsampled_gaussian(0.01, 1.0, orders=(8,))[0]
+    assert sub < full / 10

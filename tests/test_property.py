@@ -1,0 +1,98 @@
+"""Property-based tests (hypothesis) of the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clip_coefficients, ghost_norms, per_example_grads
+from repro.core.privacy import rdp_subsampled_gaussian
+from repro.core.tapper import Tapper
+from repro.models import convops
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _tiny_apply(params, batch, tp: Tapper):
+    h = tp.dense("l1", batch["x"], params["l1"]["w"], params["l1"]["b"])
+    h = jnp.tanh(h)
+    h = tp.dense("l2", h, params["l2"]["w"])
+    return jnp.sum(h * h, axis=-1) * batch["scale"]
+
+
+def _mk(seed, B=3, D=4):
+    rng = np.random.RandomState(seed)
+    params = {"l1": {"w": jnp.array(rng.randn(D, 5), jnp.float32),
+                     "b": jnp.array(rng.randn(5), jnp.float32)},
+              "l2": {"w": jnp.array(rng.randn(5, 2), jnp.float32)}}
+    batch = {"x": jnp.array(rng.randn(B, D), jnp.float32),
+             "scale": jnp.ones((B,), jnp.float32)}
+    return params, batch
+
+
+@given(st.integers(0, 1000), st.floats(0.1, 10.0))
+def test_norm_homogeneity(seed, alpha):
+    """Scaling example i's loss by alpha scales only its grad norm by
+    alpha (per-example isolation — the core DP prerequisite)."""
+    params, batch = _mk(seed)
+    _, n0, _ = ghost_norms(_tiny_apply, params, batch)
+    batch2 = dict(batch)
+    batch2["scale"] = batch["scale"].at[1].set(alpha)
+    _, n1, _ = ghost_norms(_tiny_apply, params, batch2)
+    np.testing.assert_allclose(n1[1], alpha ** 2 * n0[1], rtol=1e-3)
+    np.testing.assert_allclose(n1[0], n0[0], rtol=1e-5)
+    np.testing.assert_allclose(n1[2], n0[2], rtol=1e-5)
+
+
+@given(st.integers(0, 1000))
+def test_permutation_equivariance(seed):
+    params, batch = _mk(seed, B=4)
+    _, pe = per_example_grads(_tiny_apply, params, batch, "crb")
+    perm = np.array([2, 0, 3, 1])
+    batch_p = jax.tree.map(lambda a: a[perm], batch)
+    _, pe_p = per_example_grads(_tiny_apply, params, batch_p, "crb")
+    for a, b in zip(jax.tree.leaves(pe), jax.tree.leaves(pe_p)):
+        np.testing.assert_allclose(np.asarray(a)[perm], np.asarray(b),
+                                   rtol=2e-4, atol=1e-5)
+
+
+@given(st.lists(st.floats(1e-4, 1e4), min_size=1, max_size=8),
+       st.floats(0.01, 100.0))
+def test_clip_coef_bound(norms_sq, C):
+    c = clip_coefficients(jnp.array(norms_sq, jnp.float32), l2_clip=C)
+    clipped = np.sqrt(np.array(norms_sq)) * np.asarray(c)
+    assert np.all(clipped <= C * (1 + 1e-3))
+    assert np.all(np.asarray(c) <= 1.0 + 1e-6)
+
+
+@given(st.integers(1, 4), st.integers(1, 3), st.integers(1, 3),
+       st.integers(0, 2), st.integers(1, 2), st.integers(1, 2),
+       st.integers(0, 99))
+def test_conv_trick_random(B, C, D, pad, stride, dil, seed):
+    K, T = 3, 14
+    rng = np.random.RandomState(seed)
+    x = jnp.array(rng.randn(B, C, T), jnp.float32)
+    h = jnp.array(rng.randn(D, C, K), jnp.float32)
+    y = convops.conv_forward(x, h, stride=stride, dilation=dil, padding=pad)
+    if y.shape[-1] < 1:
+        return
+    dy = jnp.array(rng.randn(*y.shape), jnp.float32)
+    got = convops.pe_conv_grad(x, dy, kernel_spatial=(K,), stride=stride,
+                               dilation=dil, padding=pad, impl="fgc")
+
+    def loss_b(w, xb, dyb):
+        return jnp.sum(convops.conv_forward(
+            xb[None], w, stride=stride, dilation=dil, padding=pad) * dyb[None])
+
+    want = jax.vmap(lambda xb, dyb: jax.grad(loss_b)(h, xb, dyb))(x, dy)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+@given(st.floats(0.5, 3.0), st.floats(0.001, 0.5))
+def test_rdp_positive_and_monotone_in_order(sigma, q):
+    orders = (2, 4, 8, 16)
+    rdp = rdp_subsampled_gaussian(q, sigma, orders)
+    assert np.all(rdp >= 0)
+    assert np.all(np.diff(rdp) >= -1e-12)  # nondecreasing in alpha

@@ -1,0 +1,83 @@
+"""Runtime layer: straggler monitor, chaos/restart orchestration, elastic
+degree computation, optimizer convergence."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw_init, adamw_update, sgdm_init, sgdm_update, \
+    cosine_schedule
+from repro.runtime import (ChaosMonkey, StepMonitor, WorkerFailure,
+                           elastic_data_degree, run_with_restarts)
+
+
+def test_monitor_flags_stragglers():
+    mon = StepMonitor(alpha=0.5, threshold=2.0)
+    for s in range(10):
+        mon.observe(s, 0.1)
+    mon.observe(10, 1.0)
+    assert mon.stragglers and mon.stragglers[-1][0] == 10
+    assert mon.is_straggler(1.0)
+    assert not mon.is_straggler(0.11)
+
+
+def test_chaos_and_restarts():
+    chaos = ChaosMonkey(fail_at_steps=[3, 7])
+    state = {"restarts": []}
+
+    def segment(restart):
+        state["restarts"].append(restart)
+        for step in range(10):
+            chaos.maybe_fail(step)
+        return "done"
+
+    out, restarts = run_with_restarts(segment, max_restarts=5)
+    assert out == "done"
+    assert restarts == 2
+    assert chaos.tripped == 2
+
+
+def test_restart_budget_exhausted():
+    chaos = ChaosMonkey(p=1.0)
+
+    def segment(restart):
+        chaos.maybe_fail(0)
+
+    with pytest.raises(WorkerFailure):
+        run_with_restarts(segment, max_restarts=2)
+
+
+def test_elastic_degree():
+    assert elastic_data_degree(256, 16, 256) == 16
+    assert elastic_data_degree(240, 16, 256) == 8  # 15 doesn't divide 256
+    assert elastic_data_degree(32, 16, 64) == 2
+    with pytest.raises(ValueError):
+        elastic_data_degree(8, 16, 64)
+
+
+def test_adamw_converges():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+    for _ in range(200):
+        g = {"w": 2 * params["w"]}  # grad of ||w||^2
+        params, opt = adamw_update(g, opt, params, lr=0.1)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+    assert int(opt["step"]) == 200
+
+
+def test_sgdm_converges():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = sgdm_init(params)
+    for _ in range(100):
+        g = {"w": 2 * params["w"]}
+        params, opt = sgdm_update(g, opt, params, lr=0.05)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_cosine_schedule():
+    lrs = [float(cosine_schedule(jnp.asarray(s), warmup=10, total=100,
+                                 peak=1.0)) for s in (0, 9, 10, 55, 99)]
+    assert lrs[0] < lrs[1] <= 1.0
+    assert lrs[2] == pytest.approx(1.0, abs=0.01)
+    assert lrs[3] < lrs[2] and lrs[4] < lrs[3]

@@ -1,0 +1,100 @@
+"""All five per-example-gradient strategies agree (the paper's Table-1
+semantics: naive == multi == crb; ghost/bk are our extensions)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tree_maxdiff, true_norms_sq
+from repro.core import (check_coverage, clipped_grad_sum, ghost_norms,
+                        per_example_grads)
+
+TOL = 2e-5
+
+
+@pytest.fixture(scope="module")
+def oracle(toy_model):
+    apply_fn, params, batch = toy_model
+    losses, pe = per_example_grads(apply_fn, params, batch, "naive")
+    return losses, pe
+
+
+def test_multi_equals_naive(toy_model, oracle):
+    apply_fn, params, batch = toy_model
+    losses_n, pe_n = oracle
+    losses, pe = per_example_grads(apply_fn, params, batch, "multi")
+    assert np.allclose(losses, losses_n, atol=TOL)
+    assert tree_maxdiff(pe, pe_n) < TOL
+
+
+def test_crb_equals_naive(toy_model, oracle):
+    apply_fn, params, batch = toy_model
+    losses_n, pe_n = oracle
+    losses, pe = per_example_grads(apply_fn, params, batch, "crb")
+    assert np.allclose(losses, losses_n, atol=TOL)
+    assert tree_maxdiff(pe, pe_n) < TOL
+
+
+def test_crb_bgc_variant(toy_model, oracle):
+    apply_fn, params, batch = toy_model
+    _, pe_n = oracle
+    _, pe = per_example_grads(apply_fn, params, batch, "crb",
+                              conv_impl="bgc")
+    assert tree_maxdiff(pe, pe_n) < TOL
+
+
+def test_crb_coverage_complete(toy_model):
+    apply_fn, params, batch = toy_model
+    _, pe = per_example_grads(apply_fn, params, batch, "crb")
+    assert check_coverage(params, pe) == []
+
+
+def test_ghost_norms_match(toy_model, oracle):
+    apply_fn, params, batch = toy_model
+    _, pe_n = oracle
+    want = true_norms_sq(pe_n)
+    _, got, _ = ghost_norms(apply_fn, params, batch)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+@pytest.mark.parametrize("method", ["gram", "stream"])
+def test_ghost_norm_methods(toy_model, oracle, method):
+    apply_fn, params, batch = toy_model
+    _, pe_n = oracle
+    want = true_norms_sq(pe_n)
+    _, got, _ = ghost_norms(apply_fn, params, batch, norm_method=method)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+@pytest.mark.parametrize("strategy", ["multi", "crb", "ghost", "bk"])
+def test_clipped_sums_agree(toy_model, strategy):
+    apply_fn, params, batch = toy_model
+    C = 0.05
+    _, ref, _ = clipped_grad_sum(apply_fn, params, batch, l2_clip=C,
+                                 strategy="naive")
+    _, got, _ = clipped_grad_sum(apply_fn, params, batch, l2_clip=C,
+                                 strategy=strategy)
+    assert tree_maxdiff(got, ref) < TOL
+
+
+def test_clip_bound_holds(toy_model):
+    """Each clipped contribution has norm <= C -> the sum over B has norm
+    <= B*C (the DP sensitivity bound)."""
+    apply_fn, params, batch = toy_model
+    C = 0.01
+    B = batch["label"].shape[0]
+    _, gsum, norms_sq = clipped_grad_sum(apply_fn, params, batch, l2_clip=C,
+                                         strategy="ghost")
+    total = float(jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                               for g in jax.tree.leaves(gsum))))
+    assert total <= B * C * (1 + 1e-4)
+
+
+def test_ghost_norm_pallas_method(toy_model, oracle):
+    """norm_method='pallas' routes dense norms through the VMEM-tiled
+    kernel (interpret mode on CPU) and stays exact."""
+    apply_fn, params, batch = toy_model
+    _, pe_n = oracle
+    want = true_norms_sq(pe_n)
+    _, got, _ = ghost_norms(apply_fn, params, batch, norm_method="pallas")
+    np.testing.assert_allclose(got, want, rtol=1e-4)
