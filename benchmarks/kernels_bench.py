@@ -41,7 +41,31 @@ def run():
              f"stream_us={ts:.0f};hbm_ratio_xla_vs_pallas="
              f"{xla_bytes / kern_bytes:.1f}")
 
-    # --- per-example conv grad: fgc vs bgc lowering
+    # --- fused gram_norm + weighted contribution: one pass over (x, δy)
+    # vs the two-kernel sequence.  The separate path times the XLA
+    # lowering; the fused kernel runs in interpret mode on CPU (its time
+    # here is plumbing, not performance) — the analytic win is the halved
+    # HBM read of x/δy.
+    from repro.kernels import ops as kops
+    B, T, Di, Do = 4, 256, 128, 128
+    x = jnp.array(rng.randn(B, T, Di), jnp.float32)
+    dy = jnp.array(rng.randn(B, T, Do), jnp.float32)
+    w = jnp.array(rng.rand(B), jnp.float32)
+    meta = LayerMeta("dense", ("w",))
+    f_sep = jax.jit(lambda a, b, c: (
+        kinds.dense_norm_sq(meta, {"x": a}, b, method="gram"),
+        kinds.dense_contrib(meta, {"x": a}, b, c)))
+    t_sep = time_fn(f_sep, x, dy, w)
+    sep_bytes = 4 * B * T * (Di + Do) * 2          # x/δy read twice
+    fused_bytes = 4 * B * T * (Di + Do)            # read once
+    emit(f"kernels/gram_norm_sep/B{B}T{T}", t_sep,
+         f"hbm_ratio_sep_vs_fused={sep_bytes / fused_bytes:.1f}")
+    f_fused = jax.jit(lambda a, b, c: kops.gram_norm_fused(a, b, c))
+    t_fused = time_fn(f_fused, x, dy, w)
+    emit(f"kernels/gram_norm_fused/B{B}T{T}", t_fused,
+         "interpret_mode_on_cpu")
+
+    # --- per-example conv grad: fgc vs bgc lowering + autotuned bd tile
     for (B, C, D, HW, K) in [(8, 16, 32, 32, 3), (4, 32, 64, 16, 5)]:
         x = jnp.array(rng.randn(B, C, HW, HW), jnp.float32)
         out_sp = HW - K + 1
@@ -51,6 +75,9 @@ def run():
                 a, b, kernel_spatial=(K, K), impl=i))
             t = time_fn(f, x, dy)
             emit(f"kernels/pe_conv/{impl}/B{B}C{C}D{D}", t, "")
+        bd = kops.pick_bd(D, C, (HW, HW), (out_sp, out_sp), (K, K))
+        emit(f"kernels/pe_conv/pallas_bd/B{B}C{C}D{D}", 0.0,
+             f"autotuned_bd={bd}_of_D{D}")
 
 
 if __name__ == "__main__":

@@ -12,8 +12,9 @@ import traceback
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import fig1_3, fig2, kernels_bench, lm_overhead, \
-        roofline, table1
-    for mod in (table1, fig1_3, fig2, lm_overhead, kernels_bench, roofline):
+        roofline, strategies_bench, table1
+    for mod in (table1, fig1_3, fig2, lm_overhead, kernels_bench,
+                strategies_bench, roofline):
         print(f"# --- {mod.__name__} ---", flush=True)
         try:
             mod.run()

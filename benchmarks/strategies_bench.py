@@ -1,0 +1,100 @@
+"""Planned (auto) vs fixed strategies: wall time of the full DP-SGD
+gradient, emitted to BENCH_strategies.json.
+
+CPU-scaled shapes (the paper's claims are ratio claims); every timed step
+returns the gradient pytree so XLA cannot dead-code-eliminate the clipped
+sum.  ``auto`` must be no slower than the best fixed strategy on every
+config — the planner's whole point is dominating any global choice.
+
+    PYTHONPATH=src python -m benchmarks.strategies_bench [out.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_config
+from repro.core import DPConfig
+from repro.core.clipping import dp_gradient
+from repro.models.registry import build_model
+
+SETTINGS = {
+    "alexnet": dict(kind="cnn", img=64, B=4,
+                    strategies=("multi", "crb", "ghost", "bk")),
+    "vgg16": dict(kind="cnn", img=32, B=2,
+                  strategies=("crb", "ghost", "bk")),
+    "llama32_1b": dict(kind="lm", seq=256, B=8,
+                       strategies=("multi", "crb", "ghost", "bk")),
+}
+
+
+def _setup(name, s):
+    rng = np.random.RandomState(0)
+    if s["kind"] == "cnn":
+        cfg = get_config(name).replace(img_size=s["img"], n_classes=10)
+        model = build_model(cfg)
+        batch = {"img": jnp.array(
+                     rng.randn(s["B"], 3, s["img"], s["img"]), jnp.float32),
+                 "label": jnp.array(rng.randint(0, 10, (s["B"],)))}
+    else:
+        cfg = get_config("llama3.2-1b").reduced()
+        model = build_model(cfg)
+        batch = {"tokens": jnp.array(
+                     rng.randint(0, cfg.vocab, (s["B"], s["seq"]))),
+                 "labels": jnp.array(
+                     rng.randint(0, cfg.vocab, (s["B"], s["seq"])))}
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return model, params, batch
+
+
+def run(out_path: str = "BENCH_strategies.json") -> dict:
+    results: dict = {}
+    for name, s in SETTINGS.items():
+        model, params, batch = _setup(name, s)
+        fns = {}
+        for strat in s["strategies"] + ("auto",):
+            dpc = DPConfig(l2_clip=1.0, strategy=strat)
+
+            def step(p, b, _c=dpc):
+                loss, grad, _ = dp_gradient(model.apply, p, b, cfg=_c)
+                return loss, grad
+
+            fns[strat] = jax.jit(step)
+        # Interleave repeats so host noise hits every strategy equally,
+        # then keep each strategy's least-perturbed execution.
+        reps = 5 if s["kind"] == "lm" else 3
+        times = {k: float("inf") for k in fns}
+        for rep in range(reps):
+            for strat, f in fns.items():
+                t = time_fn(f, params, batch, warmup=2 if rep == 0 else 0,
+                            iters=5, reduce="min")
+                times[strat] = min(times[strat], t)
+        for strat, t in times.items():
+            emit(f"strategies/{name}/{strat}", t, "")
+        best_fixed = min(v for k, v in times.items() if k != "auto")
+        ratio = times["auto"] / best_fixed
+        results[name] = {
+            "times_us": times,
+            "best_fixed_us": best_fixed,
+            "auto_vs_best_fixed": ratio,
+            "regression": ratio > 1.0,
+        }
+        if ratio > 1.0:
+            print(f"WARNING: auto slower than best fixed strategy on "
+                  f"{name} (ratio {ratio:.3f})", flush=True)
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+    for name, rec in results.items():
+        emit(f"strategies/{name}/auto_vs_best_fixed",
+             rec["times_us"]["auto"],
+             f"ratio={rec['auto_vs_best_fixed']:.3f}")
+    return results
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "BENCH_strategies.json")

@@ -18,8 +18,8 @@ from repro.core.clipping import dp_gradient, non_dp_gradient
 from repro.models.registry import build_model
 
 SETTINGS = {  # arch -> (img, batch, strategies)
-    "alexnet": (96, 8, ("naive", "multi", "crb", "ghost", "bk")),
-    "vgg16": (64, 4, ("multi", "crb", "ghost", "bk")),  # naive too slow
+    "alexnet": (96, 8, ("naive", "multi", "crb", "ghost", "bk", "auto")),
+    "vgg16": (64, 4, ("multi", "crb", "ghost", "bk", "auto")),  # no naive
 }
 
 

@@ -60,7 +60,7 @@ print("== DP-clipped gradient sums ==")
 C = 0.1
 _, ref, _ = clipped_grad_sum(apply_fn, params, batch, l2_clip=C,
                              strategy="naive")
-for s in ("crb", "ghost", "bk"):
+for s in ("crb", "ghost", "bk", "auto"):
     _, g, _ = clipped_grad_sum(apply_fn, params, batch, l2_clip=C,
                                strategy=s)
     err = max(float(jnp.abs(a - b).max()) for a, b in

@@ -21,10 +21,11 @@ from repro.core import strategies
 class DPConfig:
     l2_clip: float = 1.0
     noise_multiplier: float = 0.0
-    strategy: str = "ghost"          # naive | multi | crb | ghost | bk
-    norm_method: str = "auto"        # auto | gram | stream
-    embed_norm: str = "segsum"       # segsum | gram (see kinds.embed_norm_sq)
+    strategy: str = "ghost"          # naive | multi | crb | ghost | bk | auto
+    norm_method: str = "auto"        # auto | gram | stream | pallas
+    embed_norm: str = "auto"         # auto | segsum | gram | pe
     conv_impl: str = "fgc"           # fgc | bgc | pallas
+    conv_norm: str | None = None     # auto | ghost | pe (None = historical)
     microbatches: int = 1
     delta: float = 1e-5
 
@@ -60,7 +61,7 @@ def dp_gradient(apply_fn: Callable, params, batch, *, cfg: DPConfig,
         losses, gsum, norms_sq = strategies.clipped_grad_sum(
             apply_fn, params, mb, l2_clip=cfg.l2_clip, strategy=cfg.strategy,
             norm_method=cfg.norm_method, conv_impl=cfg.conv_impl,
-            embed_method=cfg.embed_norm)
+            embed_method=cfg.embed_norm, conv_norm=cfg.conv_norm)
         return losses, jax.tree.map(lambda g: g.astype(jnp.float32), gsum), \
             norms_sq
 

@@ -1,23 +1,69 @@
-"""Analytic dispatch between ghost-norm realizations.
+"""Per-layer execution planner for the DP-SGD pipeline.
 
 The paper's empirical finding is that which per-example-gradient strategy
-wins depends on layer geometry (depth, width, batch, kernel size).  Here
-that observation becomes an analytic per-layer choice between:
+wins depends on layer geometry (depth, width, batch, kernel size).  This
+module turns that observation into an analytic *per-layer* plan: given the
+tapped layers' :class:`~repro.core.tapper.LayerMeta` and capture/cotangent
+shapes (from a single shape-only probe), it chooses
 
-  * ``gram``   — Gram-trick norm, FLOPs ≈ 2·B·T²·(Din+Dout), no per-example
-                 gradient materialization (peak extra memory B·chunk·T);
-  * ``stream`` — materialize per-example grads then reduce,
-                 FLOPs ≈ 4·B·T·Din·Dout, peak extra memory B·Din·Dout;
-  * ``rank1``  — no sequence axis: ‖g_b‖² = ‖x_b‖²·‖δy_b‖² exactly.
+  norm phase (per layer)
+    * ``gram``   — Gram-trick ghost norm, no per-example gradient
+                   materialization (dense: FLOPs ≈ 2·B·T²·(Din+Dout);
+                   conv via im2col: 2·B·T²·(C·K/g + D/g)·g);
+    * ``stream`` / ``pe`` — materialize per-example grads then reduce
+                   (dense: ≈ 4·B·T·Din·Dout; conv: ≈ 4·B·T·(C·K/g)·(D/g)·g),
+                   bounded by a peak-memory budget;
+    * ``rank1``  — no sequence axis: ‖g_b‖² = ‖x_b‖²·‖δy_b‖² exactly;
+    * ``segsum`` / ``gram`` for embedding gathers.
 
-Defaults target TPU v5e; the memory budget guards HBM blow-ups on the
-stream path (the Gram path is always chunk-bounded).
+  sum phase (per parameter group)
+    * ``stash``    — the norm already materialized per-example grads;
+                     keep them and form Σ_b w_b·g_b by a (B,)-weighted
+                     reduction (zero recompute);
+    * ``contrib``  — weighted per-layer contraction from the captures
+                     (the book-keeping path);
+    * ``backward`` — take this group's gradient from one shared weighted
+                     backward pass; chosen only when the contraction
+                     FLOPs exceed the layer's share of a backward by more
+                     than the backward's fixed cost (forward recompute +
+                     input-cotangent chain), amortized over all such
+                     groups.
+
+Plans are cached on (model identity, batch/param shapes, knobs): steady
+state training re-plans nothing and never re-probes — see
+:func:`get_plan`.  Defaults target TPU v5e; the memory budget guards HBM
+blow-ups on the materializing paths (the Gram paths are chunk-bounded).
 """
 from __future__ import annotations
+
+import dataclasses
+import math
+from collections import OrderedDict
+from typing import Any, Callable
+
+import jax
+
+from repro.core.tapper import LayerMeta, get_subtree, probe
 
 GRAM_CHUNK = 1024
 STREAM_MEM_BUDGET = 2 << 30  # bytes of per-example-grad scratch we tolerate
 BYTES = 4
+# A weighted second backward costs ~2x the forward on top of the wgrad
+# contractions it shares with `contrib`; expressed as a multiple of the
+# total per-layer wgrad FLOPs (forward ≈ Σ wgrad, dx-chain ≈ Σ wgrad).
+BACKWARD_FIXED_FACTOR = 2.0
+# contrib for a local_vjp layer replays the layer's VJP once *per
+# example* under vmap — for scan-based layers (SSM recurrences) the
+# vmapped per-example re-trace lowers far worse than the batched
+# backward's single pass, so its contraction is charged a premium over
+# the layer's wgrad share.  This is what can tip a local_vjp-dominated
+# model into the shared weighted backward.
+LOCAL_VJP_CONTRIB_PENALTY = 4.0
+PLAN_CACHE_SIZE = 16
+
+
+# ---------------------------------------------------------------------------
+# Scalar cost models (kept as the stable, unit-tested crossover formulas)
 
 
 def dense_norm_method(T: int, Di: int, Do: int, B: int,
@@ -42,3 +88,424 @@ def seg_norm_method(S: int, Di: int, Do: int, B: int, G: int,
     if stream_flops < gram_flops and stream_mem <= mem_budget:
         return "stream"
     return "gram"
+
+
+def conv_norm_method(T: int, C: int, D: int, K: int, B: int, groups: int = 1,
+                     mem_budget: int = STREAM_MEM_BUDGET) -> str:
+    """Conv ghost-norm (im2col Gram over T output positions with per-group
+    features F = (C/g)·K) vs materializing the per-example weight gradient
+    (the paper's Algorithm 2).  Early layers (large spatial T, few
+    channels) want ``pe``; late layers (tiny T, wide channels) want
+    ``ghost`` — the per-layer mix of Bu et al. (2022).
+
+    ``T`` = output positions, ``K`` = prod(kernel spatial dims).
+    """
+    g = max(groups, 1)
+    F, Dg = (C // g) * K, D // g
+    ghost_flops = 2 * T * T * (F + Dg) * g
+    pe_flops = 4 * T * F * Dg * g
+    pe_mem = B * D * (C // g) * K * BYTES
+    if pe_flops < ghost_flops and pe_mem <= mem_budget:
+        return "pe"
+    return "ghost"
+
+
+EMBED_PE_BUDGET = 32 << 20  # materialize embed pe grads below this
+
+
+def embed_norm_method(T: int, D: int, B: int | None = None,
+                      vocab: int | None = None,
+                      pe_budget: int = EMBED_PE_BUDGET) -> str:
+    """segsum is O(T·logT + T·D); the same-token-masked Gram is O(T²·D);
+    materializing the (B, V, D) per-example grad (``pe``) costs O(B·V·D)
+    but its sort-free scatter beats segsum's lane-serial argsort whenever
+    the table is small — and the materialized grads make the sum phase
+    free (stash).  ``pe`` is picked only under a hard memory bound."""
+    if B is not None and vocab is not None \
+            and B * vocab * D * BYTES <= pe_budget:
+        return "pe"
+    return "gram" if T <= 32 else "segsum"
+
+
+# ---------------------------------------------------------------------------
+# Plan structures
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """Per-tap decision + cost estimates (FLOPs, batch included)."""
+
+    name: str
+    kind: str
+    norm_method: str          # gram|stream|rank1|pallas|pe|segsum|...
+    stash: bool               # norm phase materializes per-example grads
+    norm_flops: float
+    contrib_flops: float
+    wgrad_flops: float        # this layer's share of a weighted backward
+    stash_bytes: float = 0.0  # size of the (B, *param) grads if stashed
+    fallback_norm: str = ""   # best no-stash method (cumulative demotion)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlan:
+    """One parameter (pytree path); >1 member means shared/tied taps."""
+
+    path: tuple
+    members: tuple                 # tap names
+    norm_mode: str                 # single | tied | group_pe
+    sum_method: str                # stash | contrib | backward
+
+
+@dataclasses.dataclass
+class ExecPlan:
+    groups: tuple
+    layers: dict                   # name -> LayerPlan
+    metas: dict                    # name -> LayerMeta
+    make_taps: Callable
+    needs_backward: bool
+    total_norm_flops: float
+    total_contrib_flops: float
+    _anchor: Any = None            # pins apply_fn identity while cached
+
+    def describe(self) -> str:
+        lines = []
+        for g in self.groups:
+            for n in g.members:
+                lp = self.layers[n]
+                lines.append(f"{n}: kind={lp.kind} norm={lp.norm_method} "
+                             f"sum={g.sum_method}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer geometry + planning
+
+
+def _prod(xs) -> int:
+    return int(math.prod(int(x) for x in xs)) if xs else 1
+
+
+def _tree_elems(tree) -> int:
+    return sum(_prod(leaf.shape) for leaf in jax.tree.leaves(tree))
+
+
+def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
+                *, norm_method: str, embed_method: str, conv_norm: str,
+                mem_budget: int, vocab: int | None = None,
+                params_sub=None) -> LayerPlan:
+    """Costs for one tap.  Stacked (scanned) applications multiply the
+    per-application cost; shared stacked dense/scale layers fold the stack
+    into the sequence axis first (matching kinds.apply_kind semantics).
+
+    The auto choice minimizes the *joint* norm + sum cost: a norm that
+    materializes per-example grads makes the sum phase a free (B,)-weighted
+    reduction over the stash, so ``stream``/``pe`` is charged once while
+    ``gram``/``ghost`` is charged norm + contraction."""
+    k = meta.scanned
+    dy_shape = tuple(dy_sh.shape)
+    stack = _prod(dy_shape[:k])
+    app_dy = dy_shape[k:]
+
+    if meta.kind == "dense" and meta.segmented:
+        x_shape = tuple(cap_sh["x"].shape)[k:]
+        S, Di, Do = x_shape[-2], x_shape[-1], app_dy[-1]
+        G = _prod(x_shape[:-2]) * stack
+        B = meta.static["n_examples"]
+        m = (norm_method if norm_method not in ("auto", "pallas")
+             else seg_norm_method(S, Di, Do, B, G, mem_budget))
+        nf = (G * S * S * (Di + Do + B) if m == "gram" else G * B * Di * Do)
+        cf = 2.0 * G * S * Di * Do
+        return LayerPlan(name, "seg_dense", m, False, nf, cf, cf,
+                         stash_bytes=B * G * Di * Do * BYTES)
+
+    if meta.kind == "dense":
+        x_shape = tuple(cap_sh["x"].shape)[k:]
+        B, Di, Do = x_shape[0], x_shape[-1], app_dy[-1]
+        T = _prod(x_shape[1:-1])
+        mult = stack
+        if meta.shared and k:
+            T, mult = T * stack, 1        # folded into the sequence axis
+        cf = 2.0 * B * T * Di * Do * mult
+        # Stashing keeps (B, *stack, Di, Do) alive until the sum phase;
+        # the un-stashed stream norm reduces one stacked layer at a time
+        # (kinds.apply_kind's sequential loop), so it only needs one
+        # layer's scratch but pays the contraction again in phase 2.
+        mem_stash = B * Di * Do * BYTES * mult
+        mem_layer = B * Di * Do * BYTES
+        stash = False
+        fallback = norm_method
+        if norm_method == "auto":
+            if T == 1:
+                m = fallback = "rank1"
+            else:
+                gram_total = 2.0 * T * T * (Di + Do) + 2.0 * T * Di * Do
+                stream_stash = 4.0 * T * Di * Do
+                stream_again = stream_stash + 2.0 * T * Di * Do
+                fallback = ("stream" if stream_again < gram_total
+                            and mem_layer <= mem_budget else "gram")
+                if stream_stash < gram_total and mem_stash <= mem_budget:
+                    m, stash = "stream", True
+                else:
+                    m = fallback
+        else:
+            m = norm_method
+            stash = m == "stream" and mem_stash <= mem_budget
+        if m == "rank1" and T != 1:
+            m = fallback = "gram"
+        nf = {"gram": 2.0 * T * T * (Di + Do),
+              "pallas": 2.0 * T * T * (Di + Do),
+              "stream": 4.0 * T * Di * Do,
+              "rank1": 2.0 * T * (Di + Do)}[m] * B * mult
+        return LayerPlan(name, "dense", m, stash, nf, cf, cf,
+                         stash_bytes=mem_stash, fallback_norm=fallback)
+
+    if meta.kind == "conv":
+        st = meta.static
+        x_shape = tuple(cap_sh["x"].shape)[k:]
+        B, C = x_shape[0], x_shape[1]
+        D = app_dy[1]
+        T = _prod(app_dy[2:])
+        K = _prod(st["kernel_shape"][2:])
+        g = max(st.get("groups", 1), 1)
+        F, Dg = (C // g) * K, D // g
+        cf = 2.0 * B * T * F * Dg * g * stack
+        mem_stash = B * D * (C // g) * K * BYTES * stack
+        mem_layer = B * D * (C // g) * K * BYTES
+        stash = False
+        fallback = conv_norm
+        if conv_norm == "auto":
+            ghost_total = (2.0 * T * T * (F + Dg) + 2.0 * T * F * Dg) * g
+            pe_stash = 4.0 * T * F * Dg * g
+            pe_again = pe_stash + 2.0 * T * F * Dg * g
+            fallback = ("pe" if pe_again < ghost_total
+                        and mem_layer <= mem_budget else "ghost")
+            if pe_stash < ghost_total and mem_stash <= mem_budget:
+                m, stash = "pe", True
+            else:
+                m = fallback
+        else:
+            m = conv_norm
+            stash = m == "pe" and mem_stash <= mem_budget
+        nf = (2.0 * B * T * T * (F + Dg) * g if m == "ghost"
+              else 4.0 * B * T * F * Dg * g) * stack
+        return LayerPlan(name, "conv", m, stash, nf, cf, cf,
+                         stash_bytes=mem_stash, fallback_norm=fallback)
+
+    if meta.kind == "embed":
+        ids_shape = tuple(cap_sh["ids"].shape)[k:]
+        B = ids_shape[0]
+        T = _prod(ids_shape[1:])
+        D = app_dy[-1]
+        # stack multiplies the stashed (B, V, D) scratch for the budget
+        m = (embed_norm_method(T, D, B * stack, vocab)
+             if embed_method == "auto" else embed_method)
+        if m == "gram":
+            nf = 2.0 * B * T * T * D
+        elif m == "pe":
+            nf = B * (T * D + (vocab or T) * D)
+        else:
+            nf = B * (T * max(math.log2(max(T, 2)), 1.0) + 2.0 * T * D)
+        nf *= stack
+        cf = 2.0 * B * T * D * stack
+        fb = (m if m != "pe" else ("gram" if T <= 32 else "segsum"))
+        return LayerPlan(name, "embed", m, m == "pe", nf, cf, cf,
+                         stash_bytes=B * (vocab or T) * D * BYTES * stack,
+                         fallback_norm=fb)
+
+    if meta.kind == "scale":
+        B = app_dy[0] if app_dy else 1
+        n = _prod(app_dy) * stack
+        return LayerPlan(name, "scale", "pe", True, 2.0 * n, 2.0 * n,
+                         2.0 * n, stash_bytes=B * app_dy[-1] * BYTES * stack
+                         if app_dy else 0.0)
+
+    # local_vjp: a layer-local VJP under vmap.  The norm phase
+    # materializes per-example grads and stashes them when the (B, *param)
+    # scratch fits the budget, making the sum free.  When the stash is
+    # vetoed, the standalone contraction replays the per-example VJP —
+    # charged LOCAL_VJP_CONTRIB_PENALTY over the batched backward's share
+    # (vmap of a scan-based layer lowers far worse than one batched
+    # backward) — which is what can tip the plan into the shared
+    # weighted backward.
+    B = app_dy[0] if app_dy else 1
+    n = 2.0 * _prod(app_dy) * stack
+    # params_sub at meta.path already carries the stacked axis in its leaf
+    # shapes for scanned layers, so B * elems is the full stash size.
+    psize = _tree_elems(params_sub) if params_sub is not None else 0
+    stash_mem = B * psize * BYTES
+    stash = psize == 0 or stash_mem <= mem_budget
+    return LayerPlan(name, meta.kind, "pe", stash, n,
+                     LOCAL_VJP_CONTRIB_PENALTY * n, n,
+                     stash_bytes=stash_mem)
+
+
+def _vocab_of(meta: LayerMeta, params) -> int | None:
+    if params is None:
+        return meta.static.get("vocab")
+    try:
+        leaf = get_subtree(params, meta.path)[meta.param_key]
+        return int(leaf.shape[-2])
+    except (KeyError, TypeError, IndexError):
+        return None
+
+
+def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
+                   make_taps: Callable, params=None, *,
+                   norm_method: str = "auto", embed_method: str = "auto",
+                   conv_norm: str = "auto",
+                   mem_budget: int = STREAM_MEM_BUDGET) -> ExecPlan:
+    """Build the per-layer plan from probed shapes.
+
+    Fixed ``norm_method`` / ``embed_method`` / ``conv_norm`` override the
+    analytic choice uniformly (the planner still fills in cost estimates).
+    """
+    layers: dict[str, LayerPlan] = {}
+    by_path: dict[tuple, list] = {}
+    for name, meta in metas.items():
+        psub = None
+        if params is not None and meta.kind == "local_vjp":
+            try:
+                psub = get_subtree(params, meta.path)
+            except (KeyError, TypeError):
+                psub = None
+        layers[name] = _plan_layer(
+            name, meta, cap_shapes[name], tap_shapes[name],
+            norm_method=norm_method, embed_method=embed_method,
+            conv_norm=conv_norm, mem_budget=mem_budget,
+            vocab=_vocab_of(meta, params) if meta.kind == "embed" else None,
+            params_sub=psub)
+        by_path.setdefault(meta.path, []).append(name)
+
+    total_wgrad = sum(lp.wgrad_flops for lp in layers.values())
+    # A weighted backward pays the forward + dx chain (the fixed factor)
+    # AND computes every parameter's wgrad — including those of groups
+    # that keep their stash/contraction, whose share is pure waste.  So
+    # switching the candidate set to the backward only pays off when the
+    # contractions it replaces exceed fixed + total_wgrad.
+    backward_cost = (BACKWARD_FIXED_FACTOR + 1.0) * total_wgrad
+
+    groups: list[GroupPlan] = []
+    for path, names in sorted(by_path.items()):
+        if len(names) == 1:
+            mode = "single"
+            sum_method = "stash" if layers[names[0]].stash else "contrib"
+        else:
+            ks = sorted((metas[n].kind, metas[n].w_transposed) for n in names)
+            mode = ("tied" if ks == [("dense", True), ("embed", False)]
+                    and len(names) == 2 else "group_pe")
+            if mode == "tied":
+                n_e = next(n for n in names if metas[n].kind == "embed")
+                if layers[n_e].norm_method == "pe":
+                    # Small tied table: materializing the summed grad once
+                    # beats segsum + Gram + the cross term, and stashes.
+                    mode = "group_pe"
+            # group_pe stashes the summed per-example grad during the norm
+            # phase; tied contracts per member.
+            sum_method = "stash" if mode == "group_pe" else "contrib"
+        groups.append(GroupPlan(path, tuple(names), mode, sum_method))
+
+    # All stashes live together from the norm phase to the sum phase, so
+    # the budget is charged cumulatively; groups past it fall back to a
+    # transient norm + phase-2 contraction (one layer's scratch at a time).
+    running = 0.0
+    for i, g in enumerate(groups):
+        if g.sum_method != "stash":
+            continue
+        # members of a group share one parameter, so a group stashes one
+        # (B, *param) tree: the largest member estimate, not the sum.
+        gb = max(layers[n].stash_bytes for n in g.members)
+        if running + gb > mem_budget:
+            groups[i] = dataclasses.replace(g, sum_method="contrib")
+            for n in g.members:
+                lp = layers[n]
+                # Re-decide the norm under no-stash economics: without the
+                # free sum, the stash-optimal method may no longer win.
+                fb = lp.fallback_norm or lp.norm_method
+                layers[n] = dataclasses.replace(lp, stash=False,
+                                                norm_method=fb)
+        else:
+            running += gb
+
+    # Greedy backward set: groups whose contraction is dearer than their
+    # wgrad share, kept only if the replaced contractions pay for the
+    # whole extra backward.
+    candidates: list[tuple[float, int]] = []
+    for i, g in enumerate(groups):
+        if g.sum_method != "contrib":
+            continue
+        cost_c = sum(layers[n].contrib_flops for n in g.members)
+        cost_b = sum(layers[n].wgrad_flops for n in g.members)
+        if cost_c > cost_b:
+            candidates.append((cost_c, i))
+
+    saving = sum(s for s, _ in candidates)
+    needs_backward = saving > backward_cost
+    if needs_backward:
+        for _, gi in candidates:
+            groups[gi] = dataclasses.replace(groups[gi],
+                                             sum_method="backward")
+
+    return ExecPlan(
+        groups=tuple(groups), layers=layers, metas=metas,
+        make_taps=make_taps, needs_backward=needs_backward,
+        total_norm_flops=sum(lp.norm_flops for lp in layers.values()),
+        total_contrib_flops=sum(lp.contrib_flops for lp in layers.values()))
+
+
+# ---------------------------------------------------------------------------
+# Plan cache: (model identity, batch/param shapes, knobs) -> ExecPlan
+#
+# probe() re-traces the whole model; caching the probe + plan makes the
+# steady-state auto path exactly one forward + one backward per step.
+
+
+_PLAN_CACHE: "OrderedDict[tuple, ExecPlan]" = OrderedDict()
+
+
+def _fn_ident(apply_fn) -> tuple:
+    self = getattr(apply_fn, "__self__", None)
+    if self is not None:
+        return (id(self), getattr(apply_fn, "__name__", ""))
+    return (id(apply_fn), "")
+
+
+def _shape_sig(tree) -> tuple:
+    return tuple(
+        (jax.tree_util.keystr(kp), tuple(leaf.shape), str(leaf.dtype))
+        for kp, leaf in jax.tree_util.tree_leaves_with_path(tree))
+
+
+def plan_cache_key(apply_fn, params, batch, opts: tuple) -> tuple:
+    return (_fn_ident(apply_fn), _shape_sig(batch), _shape_sig(params), opts)
+
+
+def clear_plan_cache():
+    _PLAN_CACHE.clear()
+
+
+def plan_cache_info() -> dict:
+    return {"size": len(_PLAN_CACHE)}
+
+
+def get_plan(apply_fn, params, batch, *, norm_method: str = "auto",
+             embed_method: str = "auto", conv_norm: str = "auto",
+             mem_budget: int = STREAM_MEM_BUDGET) -> ExecPlan:
+    """Cached planner entry point.  The anchor reference pinned in the
+    cached plan keeps ``id(apply_fn.__self__)`` stable for the entry's
+    lifetime, so a recycled id can never alias a different model."""
+    opts = (norm_method, embed_method, conv_norm, mem_budget)
+    key = plan_cache_key(apply_fn, params, batch, opts)
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        _PLAN_CACHE.move_to_end(key)
+        return plan
+    make_taps, metas, tap_shapes, cap_shapes = probe(
+        apply_fn, params, batch, return_captures=True)
+    plan = plan_execution(metas, cap_shapes, tap_shapes, make_taps, params,
+                          norm_method=norm_method, embed_method=embed_method,
+                          conv_norm=conv_norm, mem_budget=mem_budget)
+    plan._anchor = getattr(apply_fn, "__self__", apply_fn)
+    _PLAN_CACHE[key] = plan
+    while len(_PLAN_CACHE) > PLAN_CACHE_SIZE:
+        _PLAN_CACHE.popitem(last=False)
+    return plan

@@ -118,6 +118,35 @@ def dense_norm_sq(meta: LayerMeta, cap, dy, method: str = "auto"):
     return n
 
 
+def dense_norm_and_contrib(meta: LayerMeta, cap, dy, w, *,
+                           method: str = "pallas"):
+    """Fused phase: per-example squared norms *and* the weighted sum
+    Σ_b w_b·g_b in one pass over (x, δy).
+
+    ``method="pallas"`` routes through the VMEM-resident fused kernel (the
+    contribution is accumulated from the same tiles the Gram norm already
+    holds, so x/δy are read from HBM once).  ``method="stream"`` is the
+    materializing realization: per-example grads are formed once and serve
+    both reductions — this is what the planner's ``stash`` path exploits.
+    Requires the weights to be known entering the pass (bk phase 2,
+    stale-coefficient or per-layer-clipped pipelines).
+    """
+    if method == "pallas":
+        from repro.kernels import ops as kops
+        x, g = _flatten_seq(cap["x"]), _flatten_seq(dy)
+        n, cw, cb = kops.gram_norm_fused(x, g, w,
+                                         has_bias=bool(meta.bias_key))
+        out = {meta.param_key: cw.T if meta.w_transposed else cw}
+        if meta.bias_key:
+            out[meta.bias_key] = cb
+        return n, out
+    pe = dense_pe_grad(meta, cap, dy)
+    n = _sumsq(pe)
+    contrib = jax.tree.map(
+        lambda leaf: _ee("b...,b->...", leaf, w.astype(F32)), pe)
+    return n, contrib
+
+
 def dense_contrib(meta: LayerMeta, cap, dy, w):
     x, g = _flatten_seq(cap["x"]), _flatten_seq(dy)
     if meta.w_transposed:
@@ -215,19 +244,26 @@ def embed_pe_grad(meta: LayerMeta, cap, dy, vocab: int):
     return {meta.param_key: out}
 
 
-def embed_norm_sq(meta: LayerMeta, cap, dy, method: str = "segsum"):
+def embed_norm_sq(meta: LayerMeta, cap, dy, method: str = "segsum",
+                  vocab: int | None = None):
     """Embedding-gather ghost norm: ‖g_b‖² = Σ_v ‖Σ_{t: id_t=v} δy_t‖².
 
     ``segsum`` (default): sort tokens, segment-sum cotangent rows, square —
     O(T·logT + T·D).  ``gram``: same-token-masked T×T Gram — O(T²·D); at
     T=4096 the gram costs ~2.4× the *whole model's* training FLOPs, which
     the dry-run FLOP parser exposed (EXPERIMENTS.md §Perf iteration 1).
+    ``pe``: materialize the (B, V, D) per-example grad and reduce — the
+    sort-free winner for small tables (see costmodel.embed_norm_method).
     """
     ids, g = cap["ids"], dy
     B = ids.shape[0]
     ids2 = ids.reshape(B, -1)
     T = ids2.shape[1]
     g2 = g.reshape(B, T, -1)
+    if method == "auto":
+        method = costmodel.embed_norm_method(T, g2.shape[-1], B, vocab)
+    if method == "pe":
+        return _sumsq(embed_pe_grad(meta, cap, dy, vocab))
     if method == "gram":
         sy = _ee("btd,bsd->bts", g2, g2)
         m = (ids2[:, :, None] == ids2[:, None, :]).astype(F32)
@@ -312,7 +348,53 @@ def conv_pe_grad(meta: LayerMeta, cap, dy, impl: str = "fgc"):
     return out
 
 
-def conv_norm_sq(meta: LayerMeta, cap, dy, impl: str = "fgc"):
+def conv_norm_sq_ghost(meta: LayerMeta, cap, dy, *, use_pallas: bool = False):
+    """Conv ghost norm without materializing per-example weight grads:
+    im2col the input to x̃ (B, T, C·K/g per group) and apply the dense Gram
+    identity  ‖g_b‖² = Σ_{t,t'} (x̃_t·x̃_{t'}) (δy_t·δy_{t'})  per group —
+    the per-layer "ghost clipping" of Bu et al. (2022) generalized to
+    stride/dilation/padding/groups.  Cost 2·B·T²·(C·K/g + D/g)·g vs the
+    materializing path's 4·B·T·(C·K/g)·(D/g)·g: wins exactly where the
+    cost model says (small output spatial T, wide channels)."""
+    from repro.models.convops import unfold_patches
+    st = meta.static
+    x = cap["x"]
+    g = max(st.get("groups", 1), 1)
+    patches = unfold_patches(x, st["kernel_shape"][2:], stride=st["stride"],
+                             dilation=st["dilation"], padding=st["padding"])
+    B, CK, T = patches.shape
+    D = dy.shape[1]
+    gy = dy.reshape(B, D, T)
+    method = "pallas" if use_pallas else "gram"
+    if g == 1:
+        meta_d = LayerMeta("dense", meta.path, bias_key=meta.bias_key)
+        return dense_norm_sq(meta_d, {"x": patches.transpose(0, 2, 1)},
+                             gy.transpose(0, 2, 1), method=method)
+    Fg, Dg = CK // g, D // g
+    xt = patches.reshape(B, g, Fg, T).transpose(0, 1, 3, 2) \
+        .reshape(B * g, T, Fg)
+    gt = gy.reshape(B, g, Dg, T).transpose(0, 1, 3, 2).reshape(B * g, T, Dg)
+    meta_d = LayerMeta("dense", meta.path)
+    n = dense_norm_sq(meta_d, {"x": xt}, gt, method=method)
+    n = jnp.sum(n.reshape(B, g), axis=1)
+    if meta.bias_key:
+        sb = jnp.sum(gy.astype(F32), axis=2)
+        n = n + jnp.sum(jnp.square(sb), axis=1)
+    return n
+
+
+def conv_norm_sq(meta: LayerMeta, cap, dy, impl: str = "fgc",
+                 method: str = "pe"):
+    if method == "auto":
+        st = meta.static
+        T = int(np.prod(dy.shape[2:]))
+        K = int(np.prod(st["kernel_shape"][2:]))
+        method = costmodel.conv_norm_method(
+            T, cap["x"].shape[1], dy.shape[1], K, dy.shape[0],
+            max(st.get("groups", 1), 1))
+    if method in ("ghost", "pallas"):
+        return conv_norm_sq_ghost(meta, cap, dy,
+                                  use_pallas=(method == "pallas"))
     return _sumsq(conv_pe_grad(meta, cap, dy, impl=impl))
 
 
@@ -396,7 +478,7 @@ def _fold_into_seq(meta: LayerMeta, cap, dy):
 
 def apply_kind(op: str, meta: LayerMeta, cap, dy, *, params_sub=None,
                weights=None, norm_method: str = "auto", conv_impl: str = "fgc",
-               embed_method: str = "segsum"):
+               embed_method: str = "segsum", conv_norm: str = "pe"):
     """Dispatch `op` in {"pe_grad","norm_sq","contrib"} over any kind,
     handling stacked (scanned) axes and shared parameters."""
     kind = meta.kind
@@ -410,7 +492,7 @@ def apply_kind(op: str, meta: LayerMeta, cap, dy, *, params_sub=None,
         return _apply_flat(op, _unscanned(meta), cap, dy,
                            params_sub=params_sub, weights=weights,
                            norm_method=norm_method, conv_impl=conv_impl,
-                           embed_method=embed_method)
+                           embed_method=embed_method, conv_norm=conv_norm)
 
     if meta.shared and meta.scanned and op == "norm_sq":
         # Generic shared fallback: materialize the summed per-example grad
@@ -426,7 +508,7 @@ def apply_kind(op: str, meta: LayerMeta, cap, dy, *, params_sub=None,
         res = _apply_flat(op, _unscanned(meta), cap_f, dy_f,
                           params_sub=params_sub, weights=weights,
                           norm_method=norm_method, conv_impl=conv_impl,
-                          embed_method=embed_method)
+                          embed_method=embed_method, conv_norm=conv_norm)
         if op == "norm_sq":
             return res
         if op == "contrib":
@@ -454,7 +536,8 @@ def apply_kind(op: str, meta: LayerMeta, cap, dy, *, params_sub=None,
                                else p,
                                weights=weights, norm_method=norm_method,
                                conv_impl=conv_impl,
-                               embed_method=embed_method)
+                               embed_method=embed_method,
+                               conv_norm=conv_norm)
 
         # Sequential over the stacked axis: bounds peak memory to one
         # layer's worth (vmap would batch every layer's intermediates).
@@ -477,7 +560,8 @@ def apply_kind(op: str, meta: LayerMeta, cap, dy, *, params_sub=None,
 
     return _apply_flat(op, meta, cap, dy, params_sub=params_sub,
                        weights=weights, norm_method=norm_method,
-                       conv_impl=conv_impl, embed_method=embed_method)
+                       conv_impl=conv_impl, embed_method=embed_method,
+                       conv_norm=conv_norm)
 
 
 def _unscanned(meta: LayerMeta) -> LayerMeta:
@@ -486,7 +570,7 @@ def _unscanned(meta: LayerMeta) -> LayerMeta:
 
 
 def _apply_flat(op, meta, cap, dy, *, params_sub, weights, norm_method,
-                conv_impl, embed_method="segsum"):
+                conv_impl, embed_method="segsum", conv_norm="pe"):
     kind = meta.kind
     if kind == "dense" and not meta.segmented:
         if op == "pe_grad":
@@ -506,7 +590,8 @@ def _apply_flat(op, meta, cap, dy, *, params_sub, weights, norm_method,
         if op == "pe_grad":
             return embed_pe_grad(meta, cap, dy, vocab)
         if op == "norm_sq":
-            return embed_norm_sq(meta, cap, dy, method=embed_method)
+            return embed_norm_sq(meta, cap, dy, method=embed_method,
+                                 vocab=vocab)
         return embed_contrib(meta, cap, dy, weights, vocab)
     if kind == "scale":
         gshape = tuple(params_sub[meta.param_key].shape)
@@ -519,7 +604,8 @@ def _apply_flat(op, meta, cap, dy, *, params_sub, weights, norm_method,
         if op == "pe_grad":
             return conv_pe_grad(meta, cap, dy, impl=conv_impl)
         if op == "norm_sq":
-            return conv_norm_sq(meta, cap, dy, impl=conv_impl)
+            return conv_norm_sq(meta, cap, dy, impl=conv_impl,
+                                method=conv_norm)
         return conv_contrib(meta, cap, dy, weights)
     if kind == "local_vjp":
         if op == "pe_grad":

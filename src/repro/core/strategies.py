@@ -1,6 +1,6 @@
 """Per-example gradient strategies.
 
-The paper's three strategies plus the two production extensions:
+The paper's three strategies plus the production extensions:
 
   * ``naive`` — batch-size-1 loop (``lax.map``); the semantics oracle.
   * ``multi`` — ``vmap(grad)``: JAX's native realization of "B model copies
@@ -14,9 +14,22 @@ The paper's three strategies plus the two production extensions:
   * ``bk``    — "book-keeping": like ghost, but the clipped sum is formed
     by weighted per-layer contractions from the captures already in hand —
     no second backward.
+  * ``auto``  — the planned mixed pipeline: a cached per-layer execution
+    plan (:mod:`repro.core.costmodel`) chooses, for every tapped layer,
+    the cheapest exact norm realization (Gram ghost-norm — dense or
+    im2col'd conv — streamed materialization, rank-1, segsum) and the sum
+    phase (reuse grads the norm already materialized, book-keeping
+    contraction, or a shared weighted backward when contractions would
+    cost more than one extra backward).  The plan is keyed on (model,
+    batch/param shapes), so steady-state training runs exactly **one**
+    forward and **one** backward per step — no re-probe, no second
+    backward — vs the ghost path's two of each.  The plan's cost table is
+    also the seam future scaling work (sharding, microbatch schedules,
+    new layer kinds) plugs into.
 
 ``apply_fn(params, batch, tapper) -> (B,) per-example losses`` is the only
-contract a model must satisfy.
+contract a model must satisfy.  Execution counts (forwards / backwards /
+probes) are tracked in :data:`repro.core.tapper.STATS`.
 """
 from __future__ import annotations
 
@@ -26,11 +39,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import kinds
-from repro.core.tapper import (Tapper, capture_backward, get_subtree, probe,
-                               set_subtree)
+from repro.core import costmodel, kinds
+from repro.core.tapper import (STATS, Tapper, capture_backward, get_subtree,
+                               probe, set_subtree)
 
-STRATEGIES = ("naive", "multi", "crb", "ghost", "bk")
+STRATEGIES = ("naive", "multi", "crb", "ghost", "bk", "auto")
 
 
 # ---------------------------------------------------------------------------
@@ -120,7 +133,8 @@ def crb_per_example_grads(apply_fn, params, batch, *, conv_impl: str = "fgc",
 def ghost_norms_from_captures(params, caps, dtaps, metas, *,
                               norm_method: str = "auto",
                               conv_impl: str = "fgc",
-                              embed_method: str = "segsum"):
+                              embed_method: str = "segsum",
+                              conv_norm: str = "pe"):
     """Per-example squared norms of the full gradient, grouping taps that
     touch the same parameter (tied embeddings, shared blocks)."""
     by_param = defaultdict(list)
@@ -140,7 +154,7 @@ def ghost_norms_from_captures(params, caps, dtaps, metas, *,
             total = total + kinds.apply_kind(
                 "norm_sq", metas[n], caps[n], dtaps[n], params_sub=psub,
                 norm_method=norm_method, conv_impl=conv_impl,
-                embed_method=embed_method)
+                embed_method=embed_method, conv_norm=conv_norm)
             continue
         ks = sorted((metas[n].kind, metas[n].w_transposed) for n in names)
         if ks == [("dense", True), ("embed", False)] and len(names) == 2:
@@ -189,8 +203,21 @@ def _pe_tree_norms_sq(pe_grads):
 def clipped_grad_sum(apply_fn, params, batch, *, l2_clip: float,
                      strategy: str = "ghost", norm_method: str = "auto",
                      conv_impl: str = "fgc", check: bool = False,
-                     embed_method: str = "segsum"):
-    """Returns (per-example losses, Σ_b clip(g_b), per-example norms²)."""
+                     embed_method: str = "segsum",
+                     conv_norm: str | None = None):
+    """Returns (per-example losses, Σ_b clip(g_b), per-example norms²).
+
+    ``conv_norm`` (auto | ghost | pe) picks the conv norm realization;
+    ``None`` keeps the historical default: planner's choice under
+    ``strategy="auto"``, materializing (``pe``) elsewhere.
+    """
+    if strategy == "auto":
+        plan = costmodel.get_plan(
+            apply_fn, params, batch, norm_method=norm_method,
+            embed_method=embed_method, conv_norm=conv_norm or "auto")
+        return planned_clipped_sum(apply_fn, params, batch, plan,
+                                   l2_clip=l2_clip, conv_impl=conv_impl,
+                                   check=check)
     if strategy in ("naive", "multi", "crb"):
         if strategy == "naive":
             losses, pe = naive_per_example_grads(apply_fn, params, batch)
@@ -209,7 +236,8 @@ def clipped_grad_sum(apply_fn, params, batch, *, l2_clip: float,
     losses, caps, dtaps, metas = _capture(apply_fn, params, batch)
     norms_sq = ghost_norms_from_captures(
         params, caps, dtaps, metas, norm_method=norm_method,
-        conv_impl=conv_impl, embed_method=embed_method)
+        conv_impl=conv_impl, embed_method=embed_method,
+        conv_norm=conv_norm or "pe")
     coef = lax.stop_gradient(clip_coefficients(norms_sq, l2_clip))
 
     if strategy == "ghost":
@@ -217,6 +245,8 @@ def clipped_grad_sum(apply_fn, params, batch, *, l2_clip: float,
             losses2 = apply_fn(p, batch, Tapper())
             return jnp.sum(losses2 * coef)
 
+        STATS.forwards += 1
+        STATS.backwards += 1
         gsum = jax.grad(wloss)(params)
         return losses, gsum, norms_sq
 
@@ -236,6 +266,117 @@ def clipped_grad_sum(apply_fn, params, batch, *, l2_clip: float,
         return losses, gsum, norms_sq
 
     raise ValueError(f"unknown strategy {strategy!r}")
+
+
+# ---------------------------------------------------------------------------
+# The planned (mixed per-layer) pipeline: strategy="auto"
+
+
+def _batch_size(metas, dtaps):
+    for name, meta in metas.items():
+        if not meta.segmented:
+            return jax.tree.leaves(dtaps[name])[0].shape[meta.scanned]
+    for name, meta in metas.items():
+        return meta.static["n_examples"]
+    raise ValueError("no tapped layers")
+
+
+def _norm_kwargs(lp):
+    if lp.kind in ("dense", "seg_dense"):
+        return {"norm_method": lp.norm_method}
+    if lp.kind == "embed":
+        return {"embed_method": lp.norm_method}
+    if lp.kind == "conv":
+        return {"conv_norm": lp.norm_method}
+    return {}
+
+
+def planned_clipped_sum(apply_fn, params, batch, plan, *, l2_clip: float,
+                        conv_impl: str = "fgc", check: bool = False):
+    """Execute a :class:`~repro.core.costmodel.ExecPlan`: one capture
+    backward, per-layer planned norms (stashing any per-example grads the
+    norm phase materialized), then the clipped sum from stashes /
+    book-keeping contractions / at most one shared weighted backward."""
+    losses, caps, dtaps = capture_backward(apply_fn, params, batch,
+                                           plan.make_taps())
+    metas = plan.metas
+    B = _batch_size(metas, dtaps)
+    total = jnp.zeros((B,), jnp.float32)
+    stash: dict = {}
+
+    for g in plan.groups:
+        psub = get_subtree(params, g.path)
+        if g.norm_mode == "single":
+            n = g.members[0]
+            lp, meta = plan.layers[n], metas[n]
+            if lp.stash:
+                pe = kinds.apply_kind("pe_grad", meta, caps[n], dtaps[n],
+                                      params_sub=psub, conv_impl=conv_impl)
+                stash[n] = pe
+                total = total + kinds._sumsq(pe)
+            else:
+                total = total + kinds.apply_kind(
+                    "norm_sq", meta, caps[n], dtaps[n], params_sub=psub,
+                    conv_impl=conv_impl, **_norm_kwargs(lp))
+        elif g.norm_mode == "tied":
+            n_e = next(n for n in g.members if metas[n].kind == "embed")
+            n_d = next(n for n in g.members if metas[n].kind == "dense")
+            total = total + kinds.apply_kind(
+                "norm_sq", metas[n_e], caps[n_e], dtaps[n_e],
+                params_sub=psub, **_norm_kwargs(plan.layers[n_e]))
+            total = total + kinds.apply_kind(
+                "norm_sq", metas[n_d], caps[n_d], dtaps[n_d],
+                params_sub=psub, **_norm_kwargs(plan.layers[n_d]))
+            total = total + kinds.tied_embed_head_cross(
+                caps[n_e], dtaps[n_e], caps[n_d], dtaps[n_d])
+        else:  # group_pe: exact generic fallback, materialized once
+            pe_sum: dict = {}
+            for n in g.members:
+                pe = kinds.apply_kind("pe_grad", metas[n], caps[n], dtaps[n],
+                                      params_sub=psub, conv_impl=conv_impl)
+                for k, v in pe.items():
+                    pe_sum[k] = pe_sum[k] + v if k in pe_sum else v
+            if g.sum_method == "stash":
+                stash[g.path] = pe_sum
+            total = total + kinds._sumsq(pe_sum)
+
+    coef = lax.stop_gradient(clip_coefficients(total, l2_clip))
+
+    wgrads = None
+    if plan.needs_backward:
+        def wloss(p):
+            losses2 = apply_fn(p, batch, Tapper())
+            return jnp.sum(losses2 * coef)
+
+        STATS.forwards += 1
+        STATS.backwards += 1
+        wgrads = jax.grad(wloss)(params)
+
+    acc: dict = {}
+    for g in plan.groups:
+        if g.sum_method == "backward":
+            _accumulate_param_grads(acc, g.path, get_subtree(wgrads, g.path))
+            continue
+        if g.sum_method == "stash":
+            pe = stash[g.members[0] if g.norm_mode == "single" else g.path]
+            contrib = jax.tree.map(
+                lambda leaf: jnp.einsum(
+                    "b...,b->...", leaf.astype(jnp.float32), coef), pe)
+            _accumulate_param_grads(acc, g.path, contrib)
+            continue
+        psub = get_subtree(params, g.path)
+        for n in g.members:
+            contrib = kinds.apply_kind(
+                "contrib", metas[n], caps[n], dtaps[n], params_sub=psub,
+                weights=coef, conv_impl=conv_impl)
+            _accumulate_param_grads(acc, g.path, contrib)
+
+    gsum = _grads_to_tree(acc)
+    if check:
+        missing = check_coverage(params, gsum)
+        if missing:
+            raise ValueError(f"auto missing param contribs: {missing}")
+    return losses, gsum, total
 
 
 def per_example_grads(apply_fn, params, batch, strategy: str = "crb", **kw):

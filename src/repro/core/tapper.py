@@ -46,6 +46,38 @@ from jax import lax
 
 TAP_KEY = "__tap__"
 
+
+# ---------------------------------------------------------------------------
+# Pipeline instrumentation
+#
+# Counts *Python-level* executions of the expensive phases: model forwards,
+# backward passes through the model, and shape probes.  Under ``jax.jit``
+# these only tick at trace time; calling the strategies eagerly (as the
+# tests do) counts real executions per step, which is how the
+# one-forward/one-backward steady-state claim of the planned pipeline is
+# verified against the 2+2 of the ghost path.
+
+
+class PipelineStats:
+    """Counters for forwards / backwards / probes through a model."""
+
+    __slots__ = ("forwards", "backwards", "probes")
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self):
+        self.forwards = 0
+        self.backwards = 0
+        self.probes = 0
+
+    def snapshot(self) -> dict:
+        return {"forwards": self.forwards, "backwards": self.backwards,
+                "probes": self.probes}
+
+
+STATS = PipelineStats()
+
 # ---------------------------------------------------------------------------
 # Layer metadata
 
@@ -242,8 +274,11 @@ def scan_with_taps(tp: Tapper, name: str, body_fn, carry, xs_params,
 # Probe and the capture backward pass
 
 
-def probe(apply_fn, params, batch):
-    """Shape-only trace.  Returns (make_taps, metas, tap_shapes)."""
+def probe(apply_fn, params, batch, *, return_captures: bool = False):
+    """Shape-only trace.  Returns (make_taps, metas, tap_shapes) — with
+    ``return_captures`` also the per-layer capture shape dicts (tap entry
+    stripped), which the execution planner consumes."""
+    STATS.probes += 1
     metas: dict[str, LayerMeta] = {}
 
     def f(p, b):
@@ -261,11 +296,17 @@ def probe(apply_fn, params, batch):
     def make_taps():
         return {n: jnp.zeros(s.shape, s.dtype) for n, s in tap_shapes.items()}
 
+    if return_captures:
+        cap_shapes = {n: {k: v for k, v in c.items() if k != TAP_KEY}
+                      for n, c in captures_shape.items()}
+        return make_taps, metas, tap_shapes, cap_shapes
     return make_taps, metas, tap_shapes
 
 
 def capture_backward(apply_fn, params, batch, taps):
     """One backward pass → (per-example losses, captures, tap cotangents)."""
+    STATS.forwards += 1
+    STATS.backwards += 1
 
     def loss_from_taps(t):
         tp = Tapper(t, "capture")

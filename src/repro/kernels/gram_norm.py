@@ -90,6 +90,82 @@ def gram_norm(x, dy, *, has_bias: bool = False, bt: int = DEFAULT_BT,
     )(x, x, dy, dy)
 
 
+def _gram_fused_kernel(x_i, x_j, y_i, y_j, w_ref, n_ref, c_ref, cb_ref, *,
+                       has_bias: bool):
+    b, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when((b == 0) & (i == 0) & (j == 0))
+    def _init_contrib():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        cb_ref[...] = jnp.zeros_like(cb_ref)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_norm():
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    gx = jnp.dot(x_i[0], x_j[0].T, preferred_element_type=jnp.float32)
+    gy = jnp.dot(y_i[0], y_j[0].T, preferred_element_type=jnp.float32)
+    acc = jnp.sum(gx * gy)
+    if has_bias:
+        acc = acc + jnp.sum(gy)
+    n_ref[0] += acc
+
+    # The contribution Σ_b w_b x_bᵀ δy_b needs each row tile once: fold it
+    # into the j == 0 visit, where x_i / y_i are already VMEM-resident.
+    @pl.when(j == 0)
+    def _contrib():
+        w = w_ref[0]
+        c_ref[...] += w * jnp.dot(x_i[0].T, y_i[0],
+                                  preferred_element_type=jnp.float32)
+        if has_bias:
+            cb_ref[...] += w * jnp.sum(y_i[0], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("has_bias", "bt", "interpret"))
+def gram_norm_fused(x, dy, w, *, has_bias: bool = False,
+                    bt: int = DEFAULT_BT, interpret: bool = True):
+    """Fused ghost-norm + weighted contribution in one VMEM-resident pass.
+
+    x (B,T,Din), dy (B,T,Dout), w (B,) ->
+        norms_sq (B,) fp32, contrib (Din,Dout) = Σ_b w_b·x_bᵀδy_b fp32,
+        bias contrib (Dout,) = Σ_b w_b·Σ_t δy_bt (zeros unless has_bias).
+
+    The norm's (bt×bt) Gram tiles and the contribution's row tiles share
+    the same x/δy loads, so both outputs cost one HBM read of the inputs.
+    Requires the weights to be known entering the pass — i.e. the
+    book-keeping sum phase, stale-coefficient pipelines, or per-layer
+    clipping (where a layer's coefficient depends only on its own norm).
+    """
+    B, T, Di = x.shape
+    Do = dy.shape[-1]
+    bt = min(bt, max(8, 1 << (T - 1).bit_length()))
+    x, dy = _pad_t(x, bt), _pad_t(dy, bt)
+    Tp = x.shape[1]
+    grid = (B, Tp // bt, Tp // bt)
+    return pl.pallas_call(
+        functools.partial(_gram_fused_kernel, has_bias=has_bias),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, Di), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bt, Di), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bt, Do), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bt, Do), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1,), lambda b, i, j: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda b, i, j: (b,)),
+            pl.BlockSpec((Di, Do), lambda b, i, j: (0, 0)),
+            pl.BlockSpec((Do,), lambda b, i, j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((Di, Do), jnp.float32),
+            jax.ShapeDtypeStruct((Do,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, x, dy, dy, w.astype(jnp.float32))
+
+
 @functools.partial(jax.jit, static_argnames=("bt", "interpret"))
 def gram_norm_tokmask(ids, dy, *, bt: int = DEFAULT_BT,
                       interpret: bool = True):

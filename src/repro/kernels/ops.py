@@ -8,6 +8,7 @@ interpreter would be too slow.  ``use_pallas()`` centralizes the decision.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +17,10 @@ from repro.kernels import flash_attn as _fa
 from repro.kernels import gram_norm as _gn
 from repro.kernels import pe_conv_grad as _pc
 from repro.kernels import ref as _ref
+
+# Per-core VMEM the pe_conv_grad autotuner plans against: half of a TPU
+# core's ~16 MiB, leaving room for the pipeline's double-buffering.
+VMEM_BUDGET = 8 << 20
 
 
 def on_tpu() -> bool:
@@ -29,15 +34,51 @@ def gram_norm(x, dy, *, has_bias: bool = False, bt: int = 256):
     return _gn.gram_norm(x, dy, has_bias=has_bias, bt=bt, interpret=True)
 
 
+def gram_norm_fused(x, dy, w, *, has_bias: bool = False, bt: int = 256):
+    """Fused ghost-norm + weighted contribution (see gram_norm.py)."""
+    return _gn.gram_norm_fused(x, dy, w, has_bias=has_bias, bt=bt,
+                               interpret=not on_tpu())
+
+
 def gram_norm_tokmask(ids, dy, *, bt: int = 256):
     return _gn.gram_norm_tokmask(ids, dy, bt=bt, interpret=not on_tpu())
 
 
+@functools.lru_cache(maxsize=256)
+def _autotune_bd(D: int, C: int, x_spatial: tuple, dy_spatial: tuple,
+                 k_spatial: tuple, budget: int = VMEM_BUDGET) -> int:
+    """Output-channel tile for the pe_conv_grad grid: the largest divisor
+    of D whose VMEM working set — the full x block, the (bd, spatial') δy
+    tile and the (bd, C, K) output tile — fits the budget."""
+    import math
+    x_elems = C * math.prod(x_spatial)
+    per_row = math.prod(dy_spatial) + C * math.prod(k_spatial)
+    divisors = sorted((d for d in range(1, D + 1) if D % d == 0),
+                      reverse=True)
+    for bd in divisors:
+        if 4 * (x_elems + bd * per_row) <= budget:
+            return bd
+    return 1
+
+
+def pick_bd(D: int, C: int, x_spatial: tuple, dy_spatial: tuple,
+            k_spatial: tuple, budget: int = VMEM_BUDGET) -> int:
+    """Analytic bd choice, overridable with REPRO_PE_CONV_BD (rounded down
+    to a divisor of D so the kernel's tiling invariant holds).  The env
+    var is read here, outside the cache, so mid-process sweeps work."""
+    env = os.environ.get("REPRO_PE_CONV_BD")
+    if env:
+        want = max(1, min(int(env), D))
+        return max(d for d in range(1, want + 1) if D % d == 0)
+    return _autotune_bd(D, C, x_spatial, dy_spatial, k_spatial, budget)
+
+
 def pe_conv_grad(x, dy, *, kernel_spatial, stride=1, dilation=1, padding=0,
                  groups: int = 1):
-    """Pallas path for Algorithm 2.  Plain convs (stride=dilation=1,
-    groups=1) hit the kernel; anything else falls back to the XLA
-    grouped-conv lowering (still the paper's algorithm)."""
+    """Pallas path for Algorithm 2, with bd-tiled grid autotuning.  Plain
+    convs (stride=dilation=1, groups=1) hit the kernel; anything else
+    falls back to the XLA grouped-conv lowering (still the paper's
+    algorithm)."""
     from repro.models import convops
 
     def _as_tuple(v, n):
@@ -52,11 +93,14 @@ def pe_conv_grad(x, dy, *, kernel_spatial, stride=1, dilation=1, padding=0,
         if any(p):
             cfg = [(0, 0), (0, 0)] + [(pi, pi) for pi in p]
             x = jnp.pad(x, cfg)
+        bd = pick_bd(dy.shape[1], x.shape[1], tuple(x.shape[2:]),
+                     tuple(dy.shape[2:]), tuple(kernel_spatial))
         if rank == 1:
-            return _pc.pe_conv_grad_1d(x, dy, K=kernel_spatial[0],
+            return _pc.pe_conv_grad_1d(x, dy, K=kernel_spatial[0], bd=bd,
                                        interpret=interp)
         return _pc.pe_conv_grad_2d(x, dy, KH=kernel_spatial[0],
-                                   KW=kernel_spatial[1], interpret=interp)
+                                   KW=kernel_spatial[1], bd=bd,
+                                   interpret=interp)
     return convops.pe_conv_grad(x, dy, kernel_spatial=kernel_spatial,
                                 stride=stride, dilation=dilation,
                                 padding=padding, groups=groups, impl="fgc")

@@ -284,6 +284,17 @@ def parse_hlo_costs(hlo: str) -> dict:
 # ---------------------------------------------------------------------------
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()``: newer jax returns one dict,
+    older releases a per-device list of dicts (or None pre-compile)."""
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def abstract_params(model):
     axes_box = []
 
@@ -434,7 +445,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, save_hlo=None,
     t1 = time.time()
     compiled = lowered.compile()
     t2 = time.time()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     ma = compiled.memory_analysis()
     hlo = compiled.as_text()
     coll = parse_collectives(hlo)

@@ -68,7 +68,8 @@ def main(argv=None):
     ap.add_argument("--clip", type=float, default=1.0)
     ap.add_argument("--noise", type=float, default=0.0)
     ap.add_argument("--strategy", default=None,
-                    choices=[None, "naive", "multi", "crb", "ghost", "bk"])
+                    choices=[None, "naive", "multi", "crb", "ghost", "bk",
+                             "auto"])
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)

@@ -50,6 +50,19 @@ def conv_forward(x, w, *, stride=1, dilation=1, padding=0, groups: int = 1):
         feature_group_count=groups)
 
 
+def unfold_patches(x, kernel_spatial, *, stride=1, dilation=1, padding=0):
+    """im2col: x (B, C, *S) -> (B, C·K, T) patch matrix, K = prod(kernel),
+    T = prod(out_spatial).  Channel ordering is input-channel major /
+    filter-position minor, so per-group feature blocks stay contiguous."""
+    rank = len(kernel_spatial)
+    s, r, p = _tup(stride, rank), _tup(dilation, rank), _tup(padding, rank)
+    patches = lax.conv_general_dilated_patches(
+        x, filter_shape=tuple(int(k) for k in kernel_spatial),
+        window_strides=s, padding=tuple((pi, pi) for pi in p),
+        rhs_dilation=r)
+    return patches.reshape(x.shape[0], patches.shape[1], -1)
+
+
 def conv_output_spatial(in_spatial, kernel_spatial, stride, dilation, padding):
     rank = len(kernel_spatial)
     s, r, p = _tup(stride, rank), _tup(dilation, rank), _tup(padding, rank)

@@ -20,7 +20,7 @@ from repro.core import DPConfig
 from repro.core.clipping import dp_gradient
 from repro.launch import sharding as shd
 from repro.launch.dryrun import abstract_params, cache_sharding, \
-    parse_collectives
+    cost_analysis_dict, parse_collectives
 from repro.models.registry import build_model
 from repro.optim import adamw_init, adamw_update
 
@@ -62,7 +62,7 @@ with shd.mesh_rules(mesh):
 
     lowered = jax.jit(train_step).lower(params_in, opt_in, batch_in, key_in)
 compiled = lowered.compile()
-ca = compiled.cost_analysis()
+ca = cost_analysis_dict(compiled)
 coll = parse_collectives(compiled.as_text())
 ma = compiled.memory_analysis()
 print(json.dumps({
