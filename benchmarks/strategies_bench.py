@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.configs import get_config
-from repro.core import DPConfig
+from repro.core import DPConfig, PrivacyEngine
 from repro.core.clipping import dp_gradient
 from repro.models.registry import build_model
 
@@ -57,7 +57,7 @@ def run(out_path: str = "BENCH_strategies.json") -> dict:
     for name, s in SETTINGS.items():
         model, params, batch = _setup(name, s)
         fns = {}
-        for strat in s["strategies"] + ("auto",):
+        for strat in s["strategies"]:
             dpc = DPConfig(l2_clip=1.0, strategy=strat)
 
             def step(p, b, _c=dpc):
@@ -65,6 +65,12 @@ def run(out_path: str = "BENCH_strategies.json") -> dict:
                 return loss, grad
 
             fns[strat] = jax.jit(step)
+        # "auto" is timed through the production surface: a PrivacyEngine
+        # whose jitted gradient closes over the ExecPlan.
+        engine = PrivacyEngine(model.apply, params, batch,
+                               dp=DPConfig(l2_clip=1.0, strategy="auto"))
+        fns["auto"] = jax.jit(
+            lambda p, b, _e=engine: _e.noisy_grad(p, b)[:2])
         # Interleave repeats so host noise hits every strategy equally,
         # then keep each strategy's least-perturbed execution.
         reps = 5 if s["kind"] == "lm" else 3

@@ -1,22 +1,22 @@
 """Differentially-private CNN training (the paper's application).
 
-Trains a small CNN on synthetic class-conditional images with DP-SGD using
-the paper's crb strategy, reporting the privacy budget as it composes.
+Trains a small CNN on synthetic class-conditional images with DP-SGD
+through the plan-first PrivacyEngine: make private once, then every step
+is plan -> private_step -> account.  The crb reconstruction of the paper
+is pinned via ``DPConfig(strategy="crb")``.
 
     PYTHONPATH=src python examples/dp_train_cnn.py --steps 60
 """
 import argparse
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import DPConfig, PrivacyAccountant
-from repro.core.clipping import dp_gradient
+from repro.core import DPConfig, PrivacyEngine
 from repro.data import SyntheticImageDataset, poisson_batch_indices
 from repro.models.registry import build_model
-from repro.optim import sgdm_init, sgdm_update
+from repro.optim import sgdm_init
 
 
 def main():
@@ -26,6 +26,8 @@ def main():
     ap.add_argument("--clip", type=float, default=1.0)
     ap.add_argument("--noise", type=float, default=1.0)
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--strategy", default="crb",
+                    choices=["naive", "multi", "crb", "ghost", "bk", "auto"])
     args = ap.parse_args()
 
     cfg = get_config("alexnet").reduced()
@@ -33,28 +35,25 @@ def main():
     params, _ = model.init(jax.random.PRNGKey(0))
     opt = sgdm_init(params)
     ds = SyntheticImageDataset(cfg.img_size, cfg.n_classes, n_examples=4096)
-    dpc = DPConfig(l2_clip=args.clip, noise_multiplier=args.noise,
-                   strategy="crb")
-    acct = PrivacyAccountant(sampling_rate=args.batch / len(ds),
-                             noise_multiplier=args.noise)
-
-    @jax.jit
-    def step(params, opt, batch, key):
-        loss, grad, aux = dp_gradient(model.apply, params, batch, cfg=dpc,
-                                      key=key, denom=args.batch)
-        params, opt = sgdm_update(grad, opt, params, lr=args.lr)
-        return params, opt, loss, aux["clip_fraction"]
+    idx0, _ = poisson_batch_indices(0, len(ds), args.batch / len(ds),
+                                    args.batch)
+    engine = PrivacyEngine(
+        model.apply, params, ds.batch(idx0),
+        dp=DPConfig(l2_clip=args.clip, noise_multiplier=args.noise,
+                    strategy=args.strategy),
+        optimizer="sgdm", lr=args.lr, sampling_rate=args.batch / len(ds))
+    print(engine.explain())
 
     for s in range(args.steps):
         idx, mask = poisson_batch_indices(s, len(ds), args.batch / len(ds),
                                           args.batch)
         batch = jax.tree.map(jnp.asarray, ds.batch(idx))
-        params, opt, loss, cf = step(params, opt, batch,
-                                     jax.random.PRNGKey(100 + s))
-        acct.step()
+        params, opt, loss, aux = engine.private_step(
+            params, opt, batch, jax.random.PRNGKey(100 + s))
         if s % 10 == 0 or s == args.steps - 1:
             print(f"step {s:3d}  loss {float(loss):.4f}  "
-                  f"clip_frac {float(cf):.2f}  {acct.report()}")
+                  f"clip_frac {float(aux['clip_fraction']):.2f}  "
+                  f"{engine.report()}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,13 @@
-"""Quickstart: per-example gradients five ways on a small CNN.
+"""Quickstart: plan-first DP-SGD on a small CNN with PrivacyEngine.
 
-Reproduces the paper's core claim in ~40 lines of user code: the
-chain-rule-based reconstruction (crb, Algorithms 1-2) produces *exactly*
-the per-example gradients of the naive batch-size-1 loop, and the ghost /
-book-keeping extensions produce exactly the same *clipped* DP gradient.
+Make private once, step many: the engine plans a per-layer execution
+strategy (the paper's chain-rule reconstruction vs ghost norms vs
+materialization, chosen per layer by the cost model), then every training
+step is one jitted closure over that plan — exactly one forward and one
+backward.  The plan is a first-class value: inspect it with
+``engine.explain()``, serialize it with ``plan.to_json()``, and verify
+below that the legacy strategy zoo (naive / multi / crb / ghost / bk)
+produces the same clipped gradient.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,8 +15,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import clipped_grad_sum, ghost_norms, per_example_grads
-from repro.core.tapper import Tapper
+from repro import DPConfig, ExecPlan, PrivacyEngine
+from repro.core import clipped_grad_sum
+from repro.core.tapper import STATS, Tapper
+from repro.optim import adamw_init
 
 rng = np.random.RandomState(0)
 B = 8
@@ -41,29 +47,50 @@ params = {
 batch = {"img": jnp.array(rng.randn(B, 3, 16, 16), jnp.float32),
          "label": jnp.array(rng.randint(0, 10, (B,)))}
 
-print("== per-example gradients ==")
-_, pe_naive = per_example_grads(apply_fn, params, batch, "naive")
-for s in ("multi", "crb"):
-    _, pe = per_example_grads(apply_fn, params, batch, s)
-    err = max(float(jnp.abs(a - b).max()) for a, b in
-              zip(jax.tree.leaves(pe), jax.tree.leaves(pe_naive)))
-    print(f"  {s:6s} vs naive: max diff {err:.2e}")
-
-print("== ghost norms (no materialization) ==")
-true_sq = sum(jnp.sum(g.reshape(B, -1) ** 2, 1)
-              for g in jax.tree.leaves(pe_naive))
-_, norms_sq, _ = ghost_norms(apply_fn, params, batch)
-print(f"  max rel err vs true: "
-      f"{float(jnp.abs(norms_sq / true_sq - 1).max()):.2e}")
-
-print("== DP-clipped gradient sums ==")
 C = 0.1
-_, ref, _ = clipped_grad_sum(apply_fn, params, batch, l2_clip=C,
-                             strategy="naive")
-for s in ("crb", "ghost", "bk", "auto"):
-    _, g, _ = clipped_grad_sum(apply_fn, params, batch, l2_clip=C,
-                               strategy=s)
+engine = PrivacyEngine(apply_fn, params, batch,
+                       dp=DPConfig(l2_clip=C, noise_multiplier=0.8),
+                       sampling_rate=B / 4096, lr=0.05)
+
+print("== the plan (engine.explain) ==")
+print(engine.explain())
+
+print("\n== planned gradient vs the strategy zoo ==")
+# A noise-free twin of the engine (same plan) for exact comparisons: the
+# engine refuses to silently skip noise when noise_multiplier > 0.
+quiet = PrivacyEngine(apply_fn, params, batch, dp=DPConfig(l2_clip=C))
+STATS.reset()
+_, grad, aux = quiet.noisy_grad(params, batch)
+snap = STATS.snapshot()
+assert (snap["forwards"], snap["backwards"]) == (1, 1), snap
+print(f"  engine: 1 forward + 1 backward "
+      f"(clip_frac {float(aux['clip_fraction']):.2f})")
+gsum_engine = jax.tree.map(lambda g: g * B, grad)   # undo the mean
+for s in ("naive", "multi", "crb", "ghost", "bk"):
+    _, gsum, _ = clipped_grad_sum(apply_fn, params, batch, l2_clip=C,
+                                  strategy=s)
     err = max(float(jnp.abs(a - b).max()) for a, b in
-              zip(jax.tree.leaves(g), jax.tree.leaves(ref)))
-    print(f"  {s:6s} vs naive: max diff {err:.2e}")
+              zip(jax.tree.leaves(gsum), jax.tree.leaves(gsum_engine)))
+    print(f"  {s:6s} vs engine: max diff {err:.2e}")
+
+print("\n== plan serialization round trip ==")
+plan = engine.plan()
+restored = ExecPlan.from_json(plan.to_json())
+assert restored == plan
+engine2 = PrivacyEngine(apply_fn, params, batch, dp=DPConfig(l2_clip=C),
+                        plan=restored)
+_, grad2, _ = engine2.noisy_grad(params, batch)
+err = max(float(jnp.abs(a - b).max()) for a, b in
+          zip(jax.tree.leaves(grad2), jax.tree.leaves(grad)))
+print(f"  from_json(to_json(plan)) == plan; grads via restored plan "
+      f"max diff {err:.2e}")
+
+print("\n== a few private steps (jitted, accounted) ==")
+opt = adamw_init(params)
+p = params
+for step in range(3):
+    p, opt, loss, aux = engine.private_step(p, opt, batch,
+                                            jax.random.PRNGKey(step))
+    print(f"  step {step} loss {float(loss):.4f} "
+          f"clip_frac {float(aux['clip_fraction']):.2f}  [{engine.report()}]")
 print("OK")

@@ -2,17 +2,22 @@
 pod-scale JAX differential-privacy training framework.
 
 Public surface:
-  repro.core       — PEG strategies (naive/multi/crb/ghost/bk), DP-SGD,
-                     RDP privacy accounting
+  PrivacyEngine    — plan-first DP-SGD: make private once, step many;
+                     inspect with engine.explain(), serialize plans with
+                     ExecPlan.to_json()/from_json()
+  repro.core       — PEG strategies (naive/multi/crb/ghost/bk/auto),
+                     DP-SGD, the ExecPlan planner, RDP accounting
   repro.models     — taps-enabled model zoo (LMs, MoE, SSM, enc-dec, CNNs)
   repro.kernels    — Pallas TPU kernels (+ refs)
   repro.configs    — assigned architecture configs
   repro.launch     — production mesh, sharding rules, dry-run, train, serve
 """
-__version__ = "1.0.0"
+__version__ = "2.0.0"
 
-from repro.core import (DPConfig, PrivacyAccountant, Tapper, clipped_grad_sum,
-                        dp_gradient, ghost_norms, per_example_grads)
+from repro.core import (DPConfig, ExecPlan, NormCfg, PrivacyAccountant,
+                        PrivacyEngine, Tapper, clipped_grad_sum, dp_gradient,
+                        ghost_norms, per_example_grads)
 
-__all__ = ["DPConfig", "PrivacyAccountant", "Tapper", "clipped_grad_sum",
-           "dp_gradient", "ghost_norms", "per_example_grads", "__version__"]
+__all__ = ["DPConfig", "ExecPlan", "NormCfg", "PrivacyAccountant",
+           "PrivacyEngine", "Tapper", "clipped_grad_sum", "dp_gradient",
+           "ghost_norms", "per_example_grads", "__version__"]

@@ -1,7 +1,12 @@
 """The paper's primary contribution: per-example gradient computation
 (naive / multi / crb of Rochette et al. 2019, plus ghost & book-keeping
-extensions) and the DP-SGD machinery built on it."""
-from repro.core.clipping import DPConfig, add_noise, dp_gradient, non_dp_gradient
+extensions) and the DP-SGD machinery built on it.  The plan-first
+:class:`PrivacyEngine` is the public entry point; the strategy-level
+functions remain as its functional core and compatibility surface."""
+from repro.core.clipping import (DPConfig, NormCfg, add_noise, dp_gradient,
+                                 non_dp_gradient, resolve_microbatches)
+from repro.core.costmodel import ExecPlan
+from repro.core.engine import PrivacyEngine
 from repro.core.privacy import PrivacyAccountant, rdp_subsampled_gaussian
 from repro.core.strategies import (STRATEGIES, check_coverage,
                                    clip_coefficients, clipped_grad_sum,
@@ -12,7 +17,8 @@ from repro.core.tapper import (LayerMeta, Tapper, capture_backward, probe,
                                scan_with_taps)
 
 __all__ = [
-    "DPConfig", "add_noise", "dp_gradient", "non_dp_gradient",
+    "DPConfig", "NormCfg", "ExecPlan", "PrivacyEngine", "add_noise",
+    "dp_gradient", "non_dp_gradient", "resolve_microbatches",
     "PrivacyAccountant", "rdp_subsampled_gaussian", "STRATEGIES",
     "check_coverage", "clip_coefficients", "clipped_grad_sum",
     "crb_per_example_grads", "ghost_norms", "multi_per_example_grads",

@@ -1,5 +1,10 @@
 """DP-SGD gradient computation: clip, accumulate, noise.
 
+The preferred entry point is :class:`repro.core.engine.PrivacyEngine`
+(make-private-once, step-many); :func:`dp_gradient` remains as the
+functional core the engine drives and as a thin compatibility shim for
+pre-engine callers.
+
 Distribution notes (pjit): per-example norms are computed from sharded
 captures — XLA inserts the (B,)-sized reductions over the tensor-parallel
 axis automatically; the clipped gradient sum is reduced over the data axis
@@ -9,71 +14,206 @@ so each device materializes only its shard of the noise tensor.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import strategies
+from repro.core import costmodel, strategies
 
 
 @dataclasses.dataclass(frozen=True)
+class NormCfg:
+    """Per-kind norm-realization knobs (all default to the planner's
+    analytic choice).
+
+    dense:     auto | gram | stream | rank1 | pallas
+    embed:     auto | segsum | gram | pe
+    conv:      auto | ghost | pe          (norm realization)
+    conv_impl: fgc | bgc | pallas         (materializing conv-grad impl)
+    mem_budget: bytes of per-example-grad / capture scratch tolerated —
+        bounds the planner's materializing paths AND drives
+        ``microbatches="auto"``.
+    """
+
+    dense: str = "auto"
+    embed: str = "auto"
+    conv: str = "auto"
+    conv_impl: str = "fgc"
+    mem_budget: int = costmodel.STREAM_MEM_BUDGET
+
+
+# Legacy-kwarg sentinel: distinguishes "caller did not pass conv_norm" from
+# the historical conv_norm=None, which is itself deprecated (now = "auto").
+_UNSET = object()
+
+
+@dataclasses.dataclass(frozen=True, init=False)
 class DPConfig:
+    """Structured DP-SGD configuration.
+
+    Replaces the seed-era string soup (norm_method / embed_norm / conv_impl
+    / conv_norm threaded positionally): norm realizations live in a nested
+    :class:`NormCfg`, and individual layers are pinned with ``overrides``
+    ({tap-name glob: method}, first match wins).  ``microbatches`` may be
+    ``"auto"``: the count is derived from the ExecPlan's per-layer
+    peak-memory estimates against ``norm.mem_budget``.
+
+    The legacy keyword arguments are still accepted (with a
+    DeprecationWarning) and mapped onto ``norm``; the historical
+    ``conv_norm=None`` sentinel is gone — it now means ``"auto"``, and the
+    old ghost/bk materialize-always behaviour is an explicit
+    ``NormCfg(conv="pe")`` away.
+    """
+
     l2_clip: float = 1.0
     noise_multiplier: float = 0.0
-    strategy: str = "ghost"          # naive | multi | crb | ghost | bk | auto
-    norm_method: str = "auto"        # auto | gram | stream | pallas
-    embed_norm: str = "auto"         # auto | segsum | gram | pe
-    conv_impl: str = "fgc"           # fgc | bgc | pallas
-    conv_norm: str | None = None     # auto | ghost | pe (None = historical)
-    microbatches: int = 1
+    strategy: str = "auto"           # naive | multi | crb | ghost | bk | auto
+    norm: NormCfg = NormCfg()
+    overrides: tuple = ()            # ((tap-name glob, method), ...)
+    microbatches: Any = 1            # int or "auto"
     delta: float = 1e-5
+
+    def __init__(self, l2_clip: float = 1.0, noise_multiplier: float = 0.0,
+                 strategy: str = "auto", norm: NormCfg | None = None,
+                 overrides=(), microbatches: Any = 1, delta: float = 1e-5,
+                 *, norm_method: str | None = None,
+                 embed_norm: str | None = None, conv_impl: str | None = None,
+                 conv_norm: Any = _UNSET):
+        norm = norm or NormCfg()
+        legacy = {"norm_method": norm_method, "embed_norm": embed_norm,
+                  "conv_impl": conv_impl}
+        if conv_norm is not _UNSET:
+            legacy["conv_norm"] = conv_norm
+        if any(v is not None for v in legacy.values()) \
+                or conv_norm is not _UNSET:
+            warnings.warn(
+                "DPConfig(norm_method=/embed_norm=/conv_impl=/conv_norm=) "
+                "is deprecated; use DPConfig(norm=NormCfg(...)) and "
+                "overrides={...} (conv_norm=None now means 'auto')",
+                DeprecationWarning, stacklevel=2)
+            norm = dataclasses.replace(
+                norm,
+                dense=norm_method or norm.dense,
+                embed=embed_norm or norm.embed,
+                conv_impl=conv_impl or norm.conv_impl,
+                conv=(norm.conv if conv_norm is _UNSET
+                      else (conv_norm or "auto")))
+        if not (microbatches == "auto"
+                or (isinstance(microbatches, int) and microbatches >= 1)):
+            raise ValueError(
+                f"microbatches must be a positive int or 'auto', "
+                f"got {microbatches!r}")
+        object.__setattr__(self, "l2_clip", float(l2_clip))
+        object.__setattr__(self, "noise_multiplier", float(noise_multiplier))
+        object.__setattr__(self, "strategy", strategy)
+        object.__setattr__(self, "norm", norm)
+        object.__setattr__(self, "overrides",
+                           costmodel.normalize_overrides(overrides))
+        object.__setattr__(self, "microbatches", microbatches)
+        object.__setattr__(self, "delta", float(delta))
+
+    # Read-only views under the old knob names, so pre-engine call sites
+    # keep working during the migration.
+    @property
+    def norm_method(self) -> str:
+        return self.norm.dense
+
+    @property
+    def embed_norm(self) -> str:
+        return self.norm.embed
+
+    @property
+    def conv_impl(self) -> str:
+        return self.norm.conv_impl
+
+    @property
+    def conv_norm(self) -> str:
+        return self.norm.conv
+
+    def planner_opts(self) -> dict:
+        """Keyword arguments for :func:`repro.core.costmodel.get_plan`."""
+        return dict(norm_method=self.norm.dense, embed_method=self.norm.embed,
+                    conv_norm=self.norm.conv, mem_budget=self.norm.mem_budget,
+                    overrides=self.overrides)
 
 
 def add_noise(grad_sum, key, noise_multiplier: float, l2_clip: float):
+    """Add N(0, (σC)²) noise per coordinate.  Noise is generated *and
+    summed* in float32 — only the final result is cast back to the grad
+    dtype, so low-precision (bf16) grads don't silently quantize the noise
+    before it is applied."""
     if noise_multiplier == 0.0:
         return grad_sum
     leaves, treedef = jax.tree.flatten(grad_sum)
     keys = jax.random.split(key, len(leaves))
     sigma = noise_multiplier * l2_clip
     noisy = [
-        g + sigma * jax.random.normal(k, g.shape, jnp.float32).astype(g.dtype)
+        (g.astype(jnp.float32)
+         + sigma * jax.random.normal(k, g.shape, jnp.float32)).astype(g.dtype)
         for g, k in zip(leaves, keys)
     ]
     return jax.tree.unflatten(treedef, noisy)
 
 
+def resolve_microbatches(apply_fn, params, batch, cfg: DPConfig,
+                         plan=None) -> int:
+    """Resolve ``cfg.microbatches`` to a concrete count.  ``"auto"`` derives
+    it from the full-batch ExecPlan's memory estimates (planned strategies
+    only; fixed strategies have no plan to consult and run unsplit)."""
+    m = cfg.microbatches
+    if m != "auto":
+        return int(m)
+    if cfg.strategy != "auto":
+        return 1
+    if plan is None:
+        plan = costmodel.get_plan(apply_fn, params, batch,
+                                  **cfg.planner_opts())
+    B = jax.tree.leaves(batch)[0].shape[0]
+    return costmodel.auto_microbatches(plan, B, cfg.norm.mem_budget)
+
+
 def dp_gradient(apply_fn: Callable, params, batch, *, cfg: DPConfig,
-                key=None, denom: int | None = None):
+                key=None, denom: int | None = None, plan=None):
     """Full DP-SGD gradient:  (Σ_b clip_C(g_b) + σC·ξ) / denom.
 
     ``batch`` leaves have leading global batch B; with ``cfg.microbatches``
     > 1 the batch is split and scanned to bound activation memory (valid
     because clipping is per-example and accumulation a plain sum).
+    ``microbatches="auto"`` derives the split from the ExecPlan's memory
+    estimates.  ``plan`` injects a pre-built (possibly deserialized)
+    ExecPlan; it must match the per-microbatch shapes.
 
     Returns (mean loss, gradient pytree, aux dict).
     """
     B = jax.tree.leaves(batch)[0].shape[0]
     denom = denom or B
     m = cfg.microbatches
+    if m == "auto":
+        m = resolve_microbatches(apply_fn, params, batch, cfg, plan=plan)
+        if m > 1:
+            plan = None   # a caller-supplied plan was for the full batch
 
-    def one_microbatch(mb):
+    def one_microbatch(mb, mb_plan):
         losses, gsum, norms_sq = strategies.clipped_grad_sum(
             apply_fn, params, mb, l2_clip=cfg.l2_clip, strategy=cfg.strategy,
-            norm_method=cfg.norm_method, conv_impl=cfg.conv_impl,
-            embed_method=cfg.embed_norm, conv_norm=cfg.conv_norm)
+            norm_method=cfg.norm.dense, conv_impl=cfg.norm.conv_impl,
+            embed_method=cfg.norm.embed, conv_norm=cfg.norm.conv,
+            overrides=cfg.overrides, mem_budget=cfg.norm.mem_budget,
+            plan=mb_plan)
         return losses, jax.tree.map(lambda g: g.astype(jnp.float32), gsum), \
             norms_sq
 
     if m == 1:
-        losses, gsum, norms_sq = one_microbatch(batch)
+        losses, gsum, norms_sq = one_microbatch(batch, plan)
     else:
         assert B % m == 0, f"batch {B} not divisible by microbatches {m}"
         mbs = jax.tree.map(lambda a: a.reshape((m, B // m) + a.shape[1:]),
                            batch)
 
         def body(acc, mb):
-            losses, gsum, norms_sq = one_microbatch(mb)
+            losses, gsum, norms_sq = one_microbatch(mb, plan)
             acc = jax.tree.map(jnp.add, acc, gsum)
             return acc, (losses, norms_sq)
 

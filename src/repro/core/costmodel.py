@@ -37,11 +37,15 @@ blow-ups on the materializing paths (the Gram paths are chunk-bounded).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import math
 from collections import OrderedDict
-from typing import Any, Callable
+from fnmatch import fnmatchcase
+from typing import Any, Callable, Mapping
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.tapper import LayerMeta, get_subtree, probe
 
@@ -156,8 +160,48 @@ class GroupPlan:
     sum_method: str                # stash | contrib | backward
 
 
-@dataclasses.dataclass
+PLAN_FORMAT_VERSION = 1
+
+_META_FIELDS = ("kind", "path", "param_key", "bias_key", "w_transposed",
+                "segmented", "scanned", "shared", "static")
+
+
+def _retuple(x):
+    """JSON arrays back to tuples (paths, kernel shapes, strides...)."""
+    if isinstance(x, list):
+        return tuple(_retuple(v) for v in x)
+    if isinstance(x, dict):
+        return {k: _retuple(v) for k, v in x.items()}
+    return x
+
+
+def _jsonable(x):
+    if isinstance(x, tuple):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, dict):
+        return {k: _jsonable(v) for k, v in x.items()}
+    return x
+
+
+def _make_taps_from(tap_shapes: dict) -> Callable:
+    def make_taps():
+        return {n: jnp.zeros(s.shape, s.dtype) for n, s in tap_shapes.items()}
+    return make_taps
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class ExecPlan:
+    """The per-layer execution plan — a first-class, frozen value.
+
+    Inspect with :meth:`explain` (per-layer table of chosen norm/sum
+    realizations with predicted FLOPs/bytes), serialize with
+    :meth:`to_json` / :meth:`from_json` for cross-process caching keyed on
+    :attr:`fingerprint` (model + batch/param shapes + planner knobs).  A
+    deserialized plan executes without re-probing: tap zeros are rebuilt
+    from :attr:`tap_shapes` and layer metadata is re-validated against the
+    live capture trace (so a stale plan fails loudly, not wrongly).
+    """
+
     groups: tuple
     layers: dict                   # name -> LayerPlan
     metas: dict                    # name -> LayerMeta
@@ -165,6 +209,9 @@ class ExecPlan:
     needs_backward: bool
     total_norm_flops: float
     total_contrib_flops: float
+    tap_shapes: dict = dataclasses.field(default_factory=dict)
+    capture_bytes: float = 0.0     # captures + tap cotangents, whole batch
+    fingerprint: str = ""
     _anchor: Any = None            # pins apply_fn identity while cached
 
     def describe(self) -> str:
@@ -175,6 +222,108 @@ class ExecPlan:
                 lines.append(f"{n}: kind={lp.kind} norm={lp.norm_method} "
                              f"sum={g.sum_method}")
         return "\n".join(lines)
+
+    # -- inspection --------------------------------------------------------
+
+    def sum_methods(self) -> dict:
+        return {n: g.sum_method for g in self.groups for n in g.members}
+
+    def peak_stash_bytes(self) -> float:
+        """Stashes coexist from the norm phase to the sum phase; a group's
+        members share one parameter, so it stashes one (B, *param) tree."""
+        return sum(max(self.layers[n].stash_bytes for n in g.members)
+                   for g in self.groups if g.sum_method == "stash")
+
+    def explain(self) -> str:
+        """Per-layer table of the chosen realizations and predicted costs."""
+        sums = self.sum_methods()
+        header = (f"{'layer':<28} {'kind':<10} {'norm':<8} {'sum':<9} "
+                  f"{'norm MF':>9} {'sum MF':>9} {'stash MB':>9}")
+        lines = [header, "-" * len(header)]
+        for n, lp in self.layers.items():
+            stash_mb = lp.stash_bytes / 2**20 if lp.stash else 0.0
+            lines.append(
+                f"{n:<28} {lp.kind:<10} {lp.norm_method:<8} "
+                f"{sums.get(n, '?'):<9} {lp.norm_flops / 1e6:>9.2f} "
+                f"{lp.contrib_flops / 1e6:>9.2f} {stash_mb:>9.2f}")
+        passes = ("2 fwd + 2 bwd (shared weighted backward)"
+                  if self.needs_backward else "1 fwd + 1 bwd")
+        lines.append("-" * len(header))
+        lines.append(
+            f"steady-state passes: {passes}; total norm "
+            f"{self.total_norm_flops / 1e6:.2f} MF, contrib "
+            f"{self.total_contrib_flops / 1e6:.2f} MF; captures "
+            f"{self.capture_bytes / 2**20:.2f} MB, peak stash "
+            f"{self.peak_stash_bytes() / 2**20:.2f} MB")
+        if self.fingerprint:
+            lines.append(f"fingerprint: {self.fingerprint}")
+        return "\n".join(lines)
+
+    # -- serialization -----------------------------------------------------
+
+    def to_payload(self) -> dict:
+        metas = {n: {f: _jsonable(getattr(m, f)) for f in _META_FIELDS}
+                 for n, m in self.metas.items()}
+        return {
+            "format": PLAN_FORMAT_VERSION,
+            "fingerprint": self.fingerprint,
+            "needs_backward": self.needs_backward,
+            "total_norm_flops": self.total_norm_flops,
+            "total_contrib_flops": self.total_contrib_flops,
+            "capture_bytes": self.capture_bytes,
+            "layers": {n: dataclasses.asdict(lp)
+                       for n, lp in self.layers.items()},
+            "groups": [{"path": list(g.path), "members": list(g.members),
+                        "norm_mode": g.norm_mode,
+                        "sum_method": g.sum_method} for g in self.groups],
+            "metas": metas,
+            "tap_shapes": {n: {"shape": list(s.shape), "dtype": str(s.dtype)}
+                           for n, s in self.tap_shapes.items()},
+        }
+
+    def to_json(self, **json_kw) -> str:
+        return json.dumps(self.to_payload(), **json_kw)
+
+    @classmethod
+    def from_payload(cls, p: dict) -> "ExecPlan":
+        if p.get("format") != PLAN_FORMAT_VERSION:
+            raise ValueError(
+                f"unsupported plan format {p.get('format')!r} "
+                f"(this build reads {PLAN_FORMAT_VERSION})")
+        layers = {n: LayerPlan(**d) for n, d in p["layers"].items()}
+        groups = tuple(
+            GroupPlan(tuple(g["path"]), tuple(g["members"]),
+                      g["norm_mode"], g["sum_method"]) for g in p["groups"])
+        metas = {}
+        for n, d in p["metas"].items():
+            metas[n] = LayerMeta(
+                kind=d["kind"], path=tuple(d["path"]),
+                param_key=d["param_key"], bias_key=d["bias_key"],
+                w_transposed=d["w_transposed"], segmented=d["segmented"],
+                scanned=d["scanned"], shared=d["shared"],
+                static=_retuple(d["static"]))
+        tap_shapes = {
+            n: jax.ShapeDtypeStruct(tuple(s["shape"]), s["dtype"])
+            for n, s in p["tap_shapes"].items()}
+        return cls(groups=groups, layers=layers, metas=metas,
+                   make_taps=_make_taps_from(tap_shapes),
+                   needs_backward=p["needs_backward"],
+                   total_norm_flops=p["total_norm_flops"],
+                   total_contrib_flops=p["total_contrib_flops"],
+                   tap_shapes=tap_shapes,
+                   capture_bytes=p["capture_bytes"],
+                   fingerprint=p["fingerprint"])
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExecPlan":
+        return cls.from_payload(json.loads(s))
+
+    def __eq__(self, other) -> bool:
+        """Semantic equality: the serialized payload (closures and live
+        ``fn`` references excluded), so ``from_json(to_json(p)) == p``."""
+        if not isinstance(other, ExecPlan):
+            return NotImplemented
+        return self.to_payload() == other.to_payload()
 
 
 # ---------------------------------------------------------------------------
@@ -349,16 +498,61 @@ def _vocab_of(meta: LayerMeta, params) -> int | None:
         return None
 
 
+_OVERRIDE_METHODS = {
+    "dense": {"auto", "gram", "stream", "rank1", "pallas"},
+    "embed": {"auto", "segsum", "gram", "pe"},
+    "conv": {"auto", "ghost", "pe", "pallas"},
+}
+
+
+def normalize_overrides(overrides) -> tuple:
+    """Per-layer overrides as an ordered, hashable tuple of (pattern,
+    method) pairs.  Patterns are fnmatch globs over tap names (``"conv1"``,
+    ``"blocks/*"``); the first match wins, in the order given (dict
+    insertion order is preserved)."""
+    if not overrides:
+        return ()
+    if isinstance(overrides, Mapping):
+        overrides = overrides.items()
+    return tuple((str(p), str(m)) for p, m in overrides)
+
+
+def _override_for(name: str, kind: str, overrides: tuple) -> str | None:
+    """First matching override for this layer.  Kinds with no override
+    vocabulary (scale, local_vjp) ignore matches — a block-level glob like
+    ``"blocks/*"`` inevitably sweeps up their taps — but a method that is
+    wrong for an overridable kind is a hard error."""
+    valid = _OVERRIDE_METHODS.get(kind)
+    if valid is None:
+        return None
+    for pat, m in overrides:
+        if fnmatchcase(name, pat):
+            if m not in valid:
+                raise ValueError(
+                    f"per-layer override {pat!r}={m!r} invalid for {kind} "
+                    f"layer {name!r}; choose from {sorted(valid)}")
+            return m
+    return None
+
+
+def _nbytes(sds) -> float:
+    return float(_prod(sds.shape)) * jnp.dtype(sds.dtype).itemsize
+
+
 def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
                    make_taps: Callable, params=None, *,
                    norm_method: str = "auto", embed_method: str = "auto",
                    conv_norm: str = "auto",
-                   mem_budget: int = STREAM_MEM_BUDGET) -> ExecPlan:
+                   mem_budget: int = STREAM_MEM_BUDGET,
+                   overrides=None) -> ExecPlan:
     """Build the per-layer plan from probed shapes.
 
     Fixed ``norm_method`` / ``embed_method`` / ``conv_norm`` override the
-    analytic choice uniformly (the planner still fills in cost estimates).
+    analytic choice uniformly (the planner still fills in cost estimates);
+    ``overrides`` pins individual layers by tap-name glob and wins over
+    both.
     """
+    overrides = normalize_overrides(overrides)
     layers: dict[str, LayerPlan] = {}
     by_path: dict[tuple, list] = {}
     for name, meta in metas.items():
@@ -368,10 +562,11 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
                 psub = get_subtree(params, meta.path)
             except (KeyError, TypeError):
                 psub = None
+        ov = _override_for(name, meta.kind, overrides)
         layers[name] = _plan_layer(
             name, meta, cap_shapes[name], tap_shapes[name],
-            norm_method=norm_method, embed_method=embed_method,
-            conv_norm=conv_norm, mem_budget=mem_budget,
+            norm_method=ov or norm_method, embed_method=ov or embed_method,
+            conv_norm=ov or conv_norm, mem_budget=mem_budget,
             vocab=_vocab_of(meta, params) if meta.kind == "embed" else None,
             params_sub=psub)
         by_path.setdefault(meta.path, []).append(name)
@@ -445,11 +640,20 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
             groups[gi] = dataclasses.replace(groups[gi],
                                              sum_method="backward")
 
+    capture_bytes = 0.0
+    for name in metas:
+        capture_bytes += sum(_nbytes(leaf)
+                             for leaf in jax.tree.leaves(cap_shapes[name]))
+        ts = tap_shapes.get(name)
+        if ts is not None:
+            capture_bytes += 2.0 * _nbytes(ts)   # tap zeros + cotangent
+
     return ExecPlan(
         groups=tuple(groups), layers=layers, metas=metas,
         make_taps=make_taps, needs_backward=needs_backward,
         total_norm_flops=sum(lp.norm_flops for lp in layers.values()),
-        total_contrib_flops=sum(lp.contrib_flops for lp in layers.values()))
+        total_contrib_flops=sum(lp.contrib_flops for lp in layers.values()),
+        tap_shapes=dict(tap_shapes), capture_bytes=capture_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -479,33 +683,121 @@ def plan_cache_key(apply_fn, params, batch, opts: tuple) -> tuple:
     return (_fn_ident(apply_fn), _shape_sig(batch), _shape_sig(params), opts)
 
 
+def model_fingerprint(apply_fn, params, batch, opts: tuple = ()) -> str:
+    """Cross-process-stable plan identity: model qualname + batch/param
+    shape signature + planner knobs.  Unlike the in-process cache key this
+    never uses ``id()``, so a plan exported from one process keys the same
+    model in another."""
+    owner = getattr(apply_fn, "__self__", None)
+    if owner is not None:
+        ident = type(owner).__module__ + "." + type(owner).__qualname__
+    else:
+        ident = (getattr(apply_fn, "__module__", "") + "."
+                 + getattr(apply_fn, "__qualname__", "<fn>"))
+    payload = repr((ident, _shape_sig(batch), _shape_sig(params), opts))
+    return hashlib.sha1(payload.encode()).hexdigest()[:16]
+
+
 def clear_plan_cache():
     _PLAN_CACHE.clear()
 
 
 def plan_cache_info() -> dict:
-    return {"size": len(_PLAN_CACHE)}
+    return {"size": len(_PLAN_CACHE), "store": len(_PLAN_STORE)}
+
+
+# Cross-process plan store: fingerprint -> deserialized ExecPlan.  Filled by
+# load_plan_store(); consulted by get_plan() before any probe, so a process
+# that pre-loads its plans (serving, dry-run verification) never re-traces
+# the model for planning.
+
+_PLAN_STORE: dict[str, ExecPlan] = {}
+
+
+def register_plan(plan: ExecPlan):
+    if not plan.fingerprint:
+        raise ValueError("plan has no fingerprint; build it via get_plan()")
+    _PLAN_STORE[plan.fingerprint] = plan
+
+
+def clear_plan_store():
+    _PLAN_STORE.clear()
+
+
+def save_plan_store(path: str, plans, extra: dict | None = None):
+    """Write plans (+ optional extra metadata) as one JSON document."""
+    doc = {"format": PLAN_FORMAT_VERSION,
+           "plans": [p.to_payload() for p in plans]}
+    if extra:
+        doc.update(extra)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
+def load_plan_store(path: str) -> int:
+    """Load a plan JSON document into the store; returns the plan count."""
+    with open(path) as f:
+        doc = json.load(f)
+    plans = doc["plans"] if isinstance(doc, dict) else doc
+    for p in plans:
+        register_plan(ExecPlan.from_payload(p))
+    return len(plans)
 
 
 def get_plan(apply_fn, params, batch, *, norm_method: str = "auto",
              embed_method: str = "auto", conv_norm: str = "auto",
-             mem_budget: int = STREAM_MEM_BUDGET) -> ExecPlan:
+             mem_budget: int = STREAM_MEM_BUDGET,
+             overrides=None) -> ExecPlan:
     """Cached planner entry point.  The anchor reference pinned in the
     cached plan keeps ``id(apply_fn.__self__)`` stable for the entry's
-    lifetime, so a recycled id can never alias a different model."""
-    opts = (norm_method, embed_method, conv_norm, mem_budget)
+    lifetime, so a recycled id can never alias a different model.  A
+    fingerprint hit in the cross-process plan store short-circuits the
+    probe entirely."""
+    ov = normalize_overrides(overrides)
+    opts = (norm_method, embed_method, conv_norm, mem_budget, ov)
     key = plan_cache_key(apply_fn, params, batch, opts)
     plan = _PLAN_CACHE.get(key)
     if plan is not None:
         _PLAN_CACHE.move_to_end(key)
         return plan
-    make_taps, metas, tap_shapes, cap_shapes = probe(
-        apply_fn, params, batch, return_captures=True)
-    plan = plan_execution(metas, cap_shapes, tap_shapes, make_taps, params,
-                          norm_method=norm_method, embed_method=embed_method,
-                          conv_norm=conv_norm, mem_budget=mem_budget)
-    plan._anchor = getattr(apply_fn, "__self__", apply_fn)
+    fp = model_fingerprint(apply_fn, params, batch, opts)
+    plan = _PLAN_STORE.get(fp)
+    if plan is None:
+        make_taps, metas, tap_shapes, cap_shapes = probe(
+            apply_fn, params, batch, return_captures=True)
+        plan = plan_execution(
+            metas, cap_shapes, tap_shapes, make_taps, params,
+            norm_method=norm_method, embed_method=embed_method,
+            conv_norm=conv_norm, mem_budget=mem_budget, overrides=ov)
+        plan = dataclasses.replace(plan, fingerprint=fp)
+    object.__setattr__(plan, "_anchor", getattr(apply_fn, "__self__",
+                                                apply_fn))
     _PLAN_CACHE[key] = plan
     while len(_PLAN_CACHE) > PLAN_CACHE_SIZE:
         _PLAN_CACHE.popitem(last=False)
     return plan
+
+
+# ---------------------------------------------------------------------------
+# Plan-driven microbatch scheduling
+
+
+MICROBATCH_MEM_BUDGET = STREAM_MEM_BUDGET
+
+
+def auto_microbatches(plan: ExecPlan, batch_size: int,
+                      mem_budget: int | None = None) -> int:
+    """Microbatch count from the plan's peak-memory estimates: the smallest
+    divisor of ``batch_size`` whose per-microbatch peak (captures + tap
+    cotangents + coexisting stashes — all linear in the leading batch axis)
+    fits the budget.  Falls back to fully-sequential (``batch_size``) when
+    even single-example microbatches estimate over budget."""
+    budget = float(mem_budget or MICROBATCH_MEM_BUDGET)
+    need = plan.capture_bytes + plan.peak_stash_bytes()
+    B = max(int(batch_size), 1)
+    m = 1
+    while m < B and need / m > budget:
+        m += 1
+        while B % m and m < B:
+            m += 1
+    return m

@@ -1,0 +1,213 @@
+"""PrivacyEngine: the plan-first DP-SGD public surface.
+
+Make-private-once, step-many (the Opacus-style engine shape of Subramani
+et al. 2020 and Lee & Kifer 2020): construct the engine once from the
+model's ``apply_fn``, parameter/batch *shapes* and a :class:`DPConfig`;
+the per-layer :class:`~repro.core.costmodel.ExecPlan` is then a
+first-class value —
+
+  * ``engine.plan()``          the frozen plan (built once, cached);
+  * ``engine.explain()``       per-layer table of chosen norm/sum
+                               realizations with predicted FLOPs/bytes;
+  * ``plan.to_json()``         cross-process plan caching keyed on the
+                               model+shape fingerprint (pre-load a store
+                               with ``costmodel.load_plan_store`` and the
+                               engine never pays a probe);
+  * ``engine.microbatches()``  plan-driven ``microbatches="auto"`` from
+                               the plan's peak-memory estimates;
+  * ``engine.private_step()``  one jitted closure over the plan fusing
+                               gradient + clip + noise + optimizer update,
+                               with accountant bookkeeping on the host;
+  * ``engine.noisy_grad()``    the eager/jit-composable gradient-only
+                               path (what ``private_step`` jits).
+
+Steady state executes exactly one forward and one backward per step for
+``strategy="auto"`` (counters in :data:`repro.core.tapper.STATS`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel
+from repro.core.clipping import DPConfig, dp_gradient, resolve_microbatches
+from repro.core.privacy import PrivacyAccountant
+
+
+def _spec_of(tree):
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(tuple(a.shape), a.dtype), tree)
+
+
+def _resolve_optimizer(optimizer) -> Callable:
+    if callable(optimizer):
+        return optimizer
+    from repro.optim import adamw_update, sgdm_update
+    table = {"adamw": adamw_update, "sgdm": sgdm_update}
+    try:
+        return table[optimizer]
+    except KeyError:
+        raise ValueError(f"unknown optimizer {optimizer!r}; pass one of "
+                         f"{sorted(table)} or an update callable") from None
+
+
+class PrivacyEngine:
+    """Plan-first DP-SGD driver bound to one (model, batch shape, config).
+
+    Parameters:
+      apply_fn:   ``apply_fn(params, batch, tapper) -> (B,) losses``.
+      params:     parameter pytree (arrays or ShapeDtypeStructs — only
+                  shapes/dtypes are retained).
+      batch_spec: an example batch (arrays or ShapeDtypeStructs) fixing
+                  the step's batch shapes.
+      dp:         :class:`DPConfig`.
+      optimizer:  "adamw" | "sgdm" | ``update(grads, state, params, *, lr,
+                  weight_decay) -> (params, state)``.
+      lr:         learning rate, or a callable ``lr(opt_step) -> lr`` for
+                  schedules (traced inside the jitted step).
+      sampling_rate / accountant: privacy accounting — pass either the
+                  Poisson sampling rate (an accountant is built) or an
+                  existing :class:`PrivacyAccountant`.
+      plan:       inject a pre-built or deserialized ExecPlan (must match
+                  the model and shapes; validated at execution).
+    """
+
+    def __init__(self, apply_fn: Callable, params, batch_spec,
+                 dp: DPConfig | None = None, *, optimizer="adamw",
+                 lr=1e-3, weight_decay: float = 0.0,
+                 sampling_rate: float | None = None,
+                 accountant: PrivacyAccountant | None = None,
+                 plan: costmodel.ExecPlan | None = None):
+        self.apply_fn = apply_fn
+        self.dp = dp if dp is not None else DPConfig()
+        self._params_spec = _spec_of(params)
+        self._batch_spec = _spec_of(batch_spec)
+        self._update_fn = _resolve_optimizer(optimizer)
+        self._lr = lr
+        self._weight_decay = weight_decay
+        if accountant is None and sampling_rate is not None:
+            accountant = PrivacyAccountant(
+                sampling_rate=sampling_rate,
+                noise_multiplier=self.dp.noise_multiplier)
+        self.accountant = accountant
+        self._plan = plan
+
+    # -- planning ----------------------------------------------------------
+
+    def plan(self) -> costmodel.ExecPlan:
+        """The full-batch ExecPlan (built once; cache/store hits are free)."""
+        if self._plan is None:
+            self._plan = costmodel.get_plan(
+                self.apply_fn, self._params_spec, self._batch_spec,
+                **self.dp.planner_opts())
+        return self._plan
+
+    def explain(self) -> str:
+        """Human-readable per-layer plan table (see ExecPlan.explain)."""
+        header = (f"PrivacyEngine: strategy={self.dp.strategy} "
+                  f"C={self.dp.l2_clip} sigma={self.dp.noise_multiplier} "
+                  f"microbatches={self.microbatches()}"
+                  + ("" if self.dp.microbatches != "auto" else " (auto)"))
+        if self.dp.strategy != "auto":
+            return (header + f"\nfixed strategy {self.dp.strategy!r}: the "
+                    "planner is bypassed; plan below is advisory.\n"
+                    + self.plan().explain())
+        return header + "\n" + self.plan().explain()
+
+    def save_plan(self, path: str):
+        """Persist every plan this engine executes with — the full-batch
+        plan and, when microbatching splits the step, the per-microbatch
+        plan too — so a loading process never probes."""
+        plans = [self.plan()]
+        exec_plan = self._exec_plan()
+        if exec_plan is not None \
+                and exec_plan.fingerprint != plans[0].fingerprint:
+            plans.append(exec_plan)
+        costmodel.save_plan_store(path, plans)
+
+    def microbatches(self) -> int:
+        """The resolved microbatch count (plan-driven for ``"auto"``) —
+        the same resolution rule legacy ``dp_gradient`` applies."""
+        plan = self._plan
+        if self.dp.microbatches == "auto" and self.dp.strategy == "auto":
+            plan = self.plan()
+        return resolve_microbatches(self.apply_fn, self._params_spec,
+                                    self._batch_spec, self.dp, plan=plan)
+
+    def _exec_plan(self) -> costmodel.ExecPlan | None:
+        """The plan matching the shapes the step actually executes: the
+        full-batch plan, or a per-microbatch-shape plan when splitting."""
+        if self.dp.strategy != "auto":
+            return None
+        m = self.microbatches()
+        if m == 1:
+            return self.plan()
+        mb_spec = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                (s.shape[0] // m,) + tuple(s.shape[1:]), s.dtype),
+            self._batch_spec)
+        return costmodel.get_plan(self.apply_fn, self._params_spec, mb_spec,
+                                  **self.dp.planner_opts())
+
+    # -- execution ---------------------------------------------------------
+
+    def _check_key(self, key):
+        if key is None:
+            if self.dp.noise_multiplier > 0:
+                raise ValueError(
+                    "noise_multiplier > 0 requires a PRNG key per step")
+            return jax.random.PRNGKey(0)
+        return key
+
+    def noisy_grad(self, params, batch, key=None, denom: int | None = None):
+        """(mean loss, noised clipped mean gradient, aux).  Eager — safe to
+        call under an outer ``jax.jit``; ``private_step`` is the pre-jitted
+        all-in-one."""
+        cfg = dataclasses.replace(self.dp, microbatches=self.microbatches())
+        return dp_gradient(self.apply_fn, params, batch, cfg=cfg,
+                           key=self._check_key(key), denom=denom,
+                           plan=self._exec_plan())
+
+    @functools.cached_property
+    def _jit_step(self):
+        cfg = dataclasses.replace(self.dp, microbatches=self.microbatches())
+        plan = self._exec_plan()
+        update_fn, lr, wd = self._update_fn, self._lr, self._weight_decay
+        apply_fn = self.apply_fn
+
+        def step(params, opt, batch, key):
+            loss, grad, aux = dp_gradient(apply_fn, params, batch, cfg=cfg,
+                                          key=key, plan=plan)
+            lr_t = lr(opt["step"]) if callable(lr) else lr
+            params, opt = update_fn(grad, opt, params, lr=lr_t,
+                                    weight_decay=wd)
+            return params, opt, loss, aux
+
+        return jax.jit(step)
+
+    def private_step(self, params, opt, batch, key=None):
+        """One fused DP-SGD step: gradient + clip + noise + optimizer
+        update in a single jitted closure over the plan, plus host-side
+        accountant bookkeeping.  Returns (params, opt, loss, aux)."""
+        out = self._jit_step(params, opt, batch, self._check_key(key))
+        if self.accountant is not None:
+            self.accountant.step()
+        return out
+
+    # -- accounting --------------------------------------------------------
+
+    def epsilon(self, delta: float | None = None) -> float:
+        if self.accountant is None:
+            raise ValueError("engine has no accountant; pass sampling_rate=")
+        return self.accountant.epsilon(delta if delta is not None
+                                       else self.dp.delta)
+
+    def report(self, delta: float | None = None) -> str:
+        if self.accountant is None:
+            return "DP: no accountant attached"
+        return self.accountant.report(delta if delta is not None
+                                      else self.dp.delta)

@@ -134,7 +134,7 @@ def ghost_norms_from_captures(params, caps, dtaps, metas, *,
                               norm_method: str = "auto",
                               conv_impl: str = "fgc",
                               embed_method: str = "segsum",
-                              conv_norm: str = "pe"):
+                              conv_norm: str = "auto"):
     """Per-example squared norms of the full gradient, grouping taps that
     touch the same parameter (tied embeddings, shared blocks)."""
     by_param = defaultdict(list)
@@ -204,17 +204,24 @@ def clipped_grad_sum(apply_fn, params, batch, *, l2_clip: float,
                      strategy: str = "ghost", norm_method: str = "auto",
                      conv_impl: str = "fgc", check: bool = False,
                      embed_method: str = "segsum",
-                     conv_norm: str | None = None):
+                     conv_norm: str | None = None, overrides=None,
+                     mem_budget: int | None = None, plan=None):
     """Returns (per-example losses, Σ_b clip(g_b), per-example norms²).
 
-    ``conv_norm`` (auto | ghost | pe) picks the conv norm realization;
-    ``None`` keeps the historical default: planner's choice under
-    ``strategy="auto"``, materializing (``pe``) elsewhere.
+    ``conv_norm`` (auto | ghost | pe) picks the conv norm realization; the
+    historical ``None`` sentinel is a deprecated alias for ``"auto"`` (the
+    pre-engine ghost/bk default of materializing — ``"pe"`` — must now be
+    requested explicitly).  ``overrides`` pins individual layers by
+    tap-name glob (planned strategy only); ``plan`` injects a pre-built,
+    possibly deserialized ExecPlan, skipping the cached planner lookup.
     """
     if strategy == "auto":
-        plan = costmodel.get_plan(
-            apply_fn, params, batch, norm_method=norm_method,
-            embed_method=embed_method, conv_norm=conv_norm or "auto")
+        if plan is None:
+            plan = costmodel.get_plan(
+                apply_fn, params, batch, norm_method=norm_method,
+                embed_method=embed_method, conv_norm=conv_norm or "auto",
+                mem_budget=mem_budget or costmodel.STREAM_MEM_BUDGET,
+                overrides=overrides)
         return planned_clipped_sum(apply_fn, params, batch, plan,
                                    l2_clip=l2_clip, conv_impl=conv_impl,
                                    check=check)
@@ -237,7 +244,7 @@ def clipped_grad_sum(apply_fn, params, batch, *, l2_clip: float,
     norms_sq = ghost_norms_from_captures(
         params, caps, dtaps, metas, norm_method=norm_method,
         conv_impl=conv_impl, embed_method=embed_method,
-        conv_norm=conv_norm or "pe")
+        conv_norm=conv_norm or "auto")
     coef = lax.stop_gradient(clip_coefficients(norms_sq, l2_clip))
 
     if strategy == "ghost":
@@ -296,10 +303,21 @@ def planned_clipped_sum(apply_fn, params, batch, plan, *, l2_clip: float,
     """Execute a :class:`~repro.core.costmodel.ExecPlan`: one capture
     backward, per-layer planned norms (stashing any per-example grads the
     norm phase materialized), then the clipped sum from stashes /
-    book-keeping contractions / at most one shared weighted backward."""
-    losses, caps, dtaps = capture_backward(apply_fn, params, batch,
-                                           plan.make_taps())
-    metas = plan.metas
+    book-keeping contractions / at most one shared weighted backward.
+
+    Layer metadata comes from the capture trace itself (the *live* metas),
+    not the plan: a deserialized plan cannot carry ``local_vjp`` closures,
+    and validating the name sets against each other makes a stale plan fail
+    loudly instead of silently misassigning decisions."""
+    losses, caps, dtaps, metas = capture_backward(
+        apply_fn, params, batch, plan.make_taps(), with_metas=True)
+    if set(metas) != set(plan.layers):
+        missing = sorted(set(plan.layers) - set(metas))
+        extra = sorted(set(metas) - set(plan.layers))
+        raise ValueError(
+            f"ExecPlan does not match this model: plan-only layers "
+            f"{missing}, model-only layers {extra} — re-plan (stale or "
+            f"mismatched serialized plan?)")
     B = _batch_size(metas, dtaps)
     total = jnp.zeros((B,), jnp.float32)
     stash: dict = {}

@@ -303,18 +303,26 @@ def probe(apply_fn, params, batch, *, return_captures: bool = False):
     return make_taps, metas, tap_shapes
 
 
-def capture_backward(apply_fn, params, batch, taps):
-    """One backward pass → (per-example losses, captures, tap cotangents)."""
+def capture_backward(apply_fn, params, batch, taps, *,
+                     with_metas: bool = False):
+    """One backward pass → (per-example losses, captures, tap cotangents).
+
+    ``with_metas`` additionally returns the :class:`LayerMeta` dict recorded
+    while tracing — the *live* metadata, including ``fn`` references that a
+    deserialized :class:`~repro.core.costmodel.ExecPlan` cannot carry."""
     STATS.forwards += 1
     STATS.backwards += 1
+    metas: dict[str, LayerMeta] = {}
 
     def loss_from_taps(t):
-        tp = Tapper(t, "capture")
+        tp = Tapper(t, "capture", metas=metas)
         losses = apply_fn(params, batch, tp)
         return jnp.sum(losses), (losses, tp.captures)
 
     (_, (losses, caps)), dtaps = jax.value_and_grad(
         loss_from_taps, has_aux=True)(taps)
+    if with_metas:
+        return losses, caps, dtaps, metas
     return losses, caps, dtaps
 
 

@@ -1,8 +1,12 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any other import: jax locks the
-# device count at first initialization.  512 host devices back the
-# production meshes (16x16 single-pod, 2x16x16 multi-pod).
+import sys
+if not any(a == "--plan-json" or a.startswith("--plan-json=")
+           for a in sys.argv):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The lines above MUST run before any other import: jax locks the device
+# count at first initialization.  512 host devices back the production
+# meshes (16x16 single-pod, 2x16x16 multi-pod).  The --plan-json smoke
+# mode runs eagerly on default devices and skips the mesh entirely.
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
@@ -30,7 +34,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, SHAPES, get_config
-from repro.core import DPConfig
+from repro.core import DPConfig, NormCfg
 from repro.core.clipping import dp_gradient
 from repro.launch import sharding as shd
 from repro.launch.mesh import make_production_mesh
@@ -358,11 +362,19 @@ def build_cell(arch: str, shape_name: str, mesh, *, microbatches=None,
     if shape.kind == "train":
         m = microbatches or (16 if cfg.fsdp else 8)
         dpkw = dict(l2_clip=1.0, noise_multiplier=1.0,
-                    strategy=cfg.dp_strategy, microbatches=m,
-                    embed_norm="gram")  # gram = paper-faithful baseline
-        if dp_overrides:
-            dpkw.update(dp_overrides)
-        dpc = DPConfig(**dpkw)
+                    strategy=cfg.dp_strategy, microbatches=m)
+        normkw = dict(embed="gram")  # gram = paper-faithful baseline
+        # --dp-set accepts both new NormCfg names (dense/embed/conv/
+        # conv_impl) and the legacy knob names.
+        _legacy = {"norm_method": "dense", "embed_norm": "embed",
+                   "conv_norm": "conv"}
+        for k, v in (dp_overrides or {}).items():
+            k = _legacy.get(k, k)
+            if k in ("dense", "embed", "conv", "conv_impl", "mem_budget"):
+                normkw[k] = "auto" if v is None else v
+            else:
+                dpkw[k] = v
+        dpc = DPConfig(norm=NormCfg(**normkw), **dpkw)
 
         def train_step(params, opt, batch, key):
             loss, grad, aux = dp_gradient(model.apply, params, batch,
@@ -482,8 +494,76 @@ def cells_for(arch: str):
         yield s
 
 
+def _plan_smoke_batch(cfg, batch: int, seq: int):
+    rng = np.random.RandomState(0)
+    if cfg.family == "cnn":
+        return {"img": jnp.asarray(
+                    rng.randn(batch, 3, cfg.img_size, cfg.img_size),
+                    jnp.float32),
+                "label": jnp.asarray(rng.randint(0, cfg.n_classes, (batch,)))}
+    return {"tokens": jnp.asarray(rng.randint(0, cfg.vocab, (batch, seq))),
+            "labels": jnp.asarray(rng.randint(0, cfg.vocab, (batch, seq)))}
+
+
+def plan_smoke(path: str, arch: str, batch: int = 2, seq: int = 16) -> int:
+    """Serialized-plan round trip across processes.
+
+    First invocation (file absent): plan via PrivacyEngine, run one eager
+    clipped-grad step, write the plan + per-leaf gradient digests.  Second
+    invocation (file present, i.e. a fresh process): load the plan store,
+    then verify the engine executes with ZERO probes and reproduces the
+    stored gradients bit-for-bit.
+    """
+    from repro.core import PrivacyEngine, costmodel
+    from repro.core.tapper import STATS
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    batch_d = _plan_smoke_batch(cfg, batch, seq)
+    dp = DPConfig(l2_clip=1.0, strategy="auto")
+
+    def digests(grad):
+        import hashlib
+        return {jax.tree_util.keystr(kp):
+                hashlib.sha256(np.ascontiguousarray(
+                    np.asarray(leaf)).tobytes()).hexdigest()
+                for kp, leaf in jax.tree_util.tree_leaves_with_path(grad)}
+
+    if os.path.exists(path):
+        n = costmodel.load_plan_store(path)
+        engine = PrivacyEngine(model.apply, params, batch_d, dp=dp)
+        STATS.reset()
+        _, grad, _ = engine.noisy_grad(params, batch_d)
+        snap = STATS.snapshot()
+        assert snap["probes"] == 0, \
+            f"plan store missed — model was re-probed: {snap}"
+        with open(path) as f:
+            want = json.load(f)["grad_digest"]
+        got = digests(grad)
+        bad = {k: (want[k], got.get(k)) for k in want if want[k] != got.get(k)}
+        assert not bad, f"loaded-plan gradients differ: {bad}"
+        print(f"plan smoke OK: {n} plan(s) loaded, probes=0, "
+              f"{len(got)} gradient digests identical")
+    else:
+        engine = PrivacyEngine(model.apply, params, batch_d, dp=dp)
+        _, grad, _ = engine.noisy_grad(params, batch_d)
+        costmodel.save_plan_store(path, [engine.plan()],
+                                  extra={"grad_digest": digests(grad)})
+        print(f"plan smoke: wrote plan + digests to {path} "
+              f"(fingerprint {engine.plan().fingerprint})")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--plan-json", default=None,
+                    help="serialized-ExecPlan smoke: write plan + gradient "
+                         "digests if the file is absent, else load it and "
+                         "verify probe-free, bit-identical execution")
+    ap.add_argument("--plan-arch", default="llama3.2-1b")
+    ap.add_argument("--plan-batch", type=int, default=2)
+    ap.add_argument("--plan-seq", type=int, default=16)
     ap.add_argument("--arch", nargs="*", default=ARCH_IDS)
     ap.add_argument("--shape", nargs="*", default=None)
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
@@ -497,6 +577,10 @@ def main():
                     help="DPConfig overrides, e.g. strategy=bk "
                          "embed_norm=segsum norm_method=stream")
     args = ap.parse_args()
+
+    if args.plan_json:
+        return plan_smoke(args.plan_json, args.plan_arch,
+                          batch=args.plan_batch, seq=args.plan_seq)
 
     def _parse_kv(items):
         out = {}

@@ -4,6 +4,12 @@ Requests (token prompts) are grouped into fixed-size batches; each batch
 is prefilled once and decoded step-by-step with the KV/recurrent cache.
 This is the small-scale twin of the decode_32k/long_500k dry-run cells.
 
+``--dp-plan`` pre-loads a serialized ExecPlan store (written by
+``launch/train.py --plan-json`` or ``launch/dryrun.py --plan-json``) so
+that any DP-gradient work colocated with serving — online fine-tuning,
+per-request gradient attribution — hits the store by fingerprint and
+never pays a model probe in the serving process.
+
     PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced \
         --n-requests 8 --batch 4 --gen 16
 """
@@ -51,7 +57,15 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--dp-plan", default=None,
+                    help="serialized ExecPlan store to pre-load (skips the "
+                         "planning probe for colocated DP-gradient work)")
     args = ap.parse_args(argv)
+
+    if args.dp_plan:
+        from repro.core import costmodel
+        n = costmodel.load_plan_store(args.dp_plan)
+        print(f"[dp] pre-loaded {n} exec plan(s) from {args.dp_plan}")
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -1,9 +1,10 @@
 """End-to-end DP training driver with checkpoint/restart fault tolerance.
 
 Runs on whatever devices exist (CPU here, a pod in production — the same
-code path: the mesh is just bigger).  Demonstrates the full stack: model
-zoo + taps DP gradients + privacy accountant + checkpointing + straggler
-monitor + chaos-monkey fault injection.
+code path: the mesh is just bigger).  The loop is plan → step → account:
+one PrivacyEngine owns the ExecPlan, the jitted private step, and the
+accountant; checkpointing, the straggler monitor, and chaos-monkey fault
+injection wrap around it.
 
     PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
         --reduced --steps 50 --batch 8 --noise 0.8 --clip 1.0 \
@@ -12,7 +13,7 @@ monitor + chaos-monkey fault injection.
 from __future__ import annotations
 
 import argparse
-import time
+import os
 
 import jax
 import jax.numpy as jnp
@@ -20,11 +21,10 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config
-from repro.core import DPConfig, PrivacyAccountant
-from repro.core.clipping import dp_gradient
+from repro.core import DPConfig, PrivacyAccountant, PrivacyEngine, costmodel
 from repro.data import SyntheticImageDataset, SyntheticLMDataset
 from repro.models.registry import build_model
-from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.optim import adamw_init, cosine_schedule
 from repro.runtime import ChaosMonkey, StepMonitor, WorkerFailure, \
     run_with_restarts
 
@@ -70,7 +70,15 @@ def main(argv=None):
     ap.add_argument("--strategy", default=None,
                     choices=[None, "naive", "multi", "crb", "ghost", "bk",
                              "auto"])
-    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--microbatches", default=1,
+                    type=lambda v: v if v == "auto" else int(v),
+                    help="int, or 'auto' to derive from the plan's "
+                         "peak-memory estimates")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the per-layer execution plan and exit")
+    ap.add_argument("--plan-json", default=None,
+                    help="plan cache file: loaded if present (skips the "
+                         "probe), written after planning otherwise")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])
@@ -93,49 +101,63 @@ def main(argv=None):
     model = build_model(cfg)
     dpc = DPConfig(l2_clip=args.clip, noise_multiplier=args.noise,
                    strategy=args.strategy or cfg.dp_strategy,
-                   microbatches=args.microbatches)
+                   microbatches=args.microbatches, delta=args.delta)
     batch_fn = make_batch_fn(cfg, args.batch, args.seq)
     n_data = 1 << 16
     acct = PrivacyAccountant(sampling_rate=args.batch / n_data,
                              noise_multiplier=args.noise)
     chaos = ChaosMonkey(fail_at_steps=args.fail_at)
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if args.plan_json and os.path.exists(args.plan_json):
+        n = costmodel.load_plan_store(args.plan_json)
+        print(f"[plan] loaded {n} plan(s) from {args.plan_json}")
 
-    @jax.jit
-    def train_step(params, opt, batch, key, lr):
-        loss, grad, aux = dp_gradient(model.apply, params, batch, cfg=dpc,
-                                      key=key)
-        params, opt = adamw_update(grad, opt, params, lr=lr,
-                                   weight_decay=0.01)
-        return params, opt, loss, aux["clip_fraction"]
+    # Plan once: the engine is the step.  Restarted segments re-enter here
+    # with the plan cache warm, so only the first segment ever probes.
+    # params0 doubles as every segment's (deterministic) starting point.
+    params0, _ = model.init(jax.random.PRNGKey(0))
+    engine = PrivacyEngine(
+        model.apply, params0, batch_fn(0), dp=dpc, optimizer="adamw",
+        lr=lambda step: cosine_schedule(step, warmup=10, total=args.steps,
+                                        peak=args.lr),
+        weight_decay=0.01, accountant=acct)
+    # Fixed strategies bypass the planner; don't pay an advisory probe for
+    # them unless the user asks.
+    if args.explain or dpc.strategy == "auto":
+        print(engine.explain())
+    if args.explain:
+        return []
+    if args.plan_json and not os.path.exists(args.plan_json):
+        engine.save_plan(args.plan_json)
+        print(f"[plan] wrote {args.plan_json}")
+
+    # One monitor for the whole run: stragglers survive restarts instead of
+    # being read off a fresh (empty) StepMonitor at the end.
+    mon = StepMonitor()
 
     def segment(restart_count):
-        params, _ = model.init(jax.random.PRNGKey(0))
+        params = params0
         opt = adamw_init(params)
         start = 0
         if ckpt and ckpt.latest_step() is not None:
             (params, opt), start = ckpt.restore((params, opt))
             start += 1
             print(f"[restore] resuming from step {start}")
-        mon = StepMonitor()
         losses = []
         for step in range(start, args.steps):
             chaos.maybe_fail(step)
             mon.start()
-            lr = cosine_schedule(jnp.asarray(step), warmup=10,
-                                 total=args.steps, peak=args.lr)
             batch = jax.tree.map(jnp.asarray, batch_fn(step))
             key = jax.random.PRNGKey(1000 + step)
-            params, opt, loss, cf = train_step(
-                params, opt, batch, jax.random.key_data(key), lr)
+            params, opt, loss, aux = engine.private_step(
+                params, opt, batch, jax.random.key_data(key))
             dt = mon.stop(step)
-            acct.step()
             losses.append(float(loss))
             if step % 10 == 0 or step == args.steps - 1:
                 print(f"step {step:4d} loss {float(loss):.4f} "
-                      f"clip_frac {float(cf):.2f} {dt*1e3:.0f}ms"
-                      + (f" [{acct.report(args.delta)}]"
-                         if args.noise else ""))
+                      f"clip_frac {float(aux['clip_fraction']):.2f} "
+                      f"{dt*1e3:.0f}ms"
+                      + (f" [{engine.report()}]" if args.noise else ""))
             if ckpt and (step + 1) % args.ckpt_every == 0:
                 ckpt.save_async(step, (params, opt))
         if ckpt:
@@ -145,9 +167,9 @@ def main(argv=None):
 
     losses, restarts = run_with_restarts(segment, max_restarts=5)
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}), "
-          f"restarts={restarts}, stragglers={len(StepMonitor().stragglers)}")
+          f"restarts={restarts}, stragglers={len(mon.stragglers)}")
     if args.noise:
-        print(acct.report(args.delta))
+        print(engine.report())
     return losses
 
 

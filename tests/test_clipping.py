@@ -38,6 +38,39 @@ def test_noise_statistics():
     np.testing.assert_allclose(flat.std(), sigma * C, rtol=0.05)
 
 
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 0.05),
+                                        (jnp.bfloat16, 0.05),
+                                        (jnp.float16, 0.05)])
+def test_noise_variance_per_dtype(dtype, rtol):
+    """Noise variance is pinned at (σC)² for every grad dtype: the noise is
+    generated in float32 and added *before* the cast back, so low-precision
+    grads never quantize σ·ξ on its own."""
+    grad = {"w": jnp.zeros((256, 256), dtype)}
+    sigma, C = 1.5, 2.0
+    noisy = add_noise(grad, jax.random.PRNGKey(3), sigma, C)
+    assert noisy["w"].dtype == dtype
+    flat = np.asarray(noisy["w"], np.float64).ravel()
+    np.testing.assert_allclose(flat.std(), sigma * C, rtol=rtol)
+    assert abs(flat.mean()) < 0.05 * sigma * C
+
+
+def test_noise_added_in_float32_before_cast():
+    """Order of operations pinned: result == cast(f32(g) + σC·ξ_f32), not
+    g + cast(σC·ξ) — distinguishable because bf16 rounds signal+noise once
+    instead of rounding the noise and the sum separately."""
+    rng = np.random.RandomState(0)
+    g32 = jnp.array(rng.randn(64, 64), jnp.float32)
+    grad = {"w": g32.astype(jnp.bfloat16)}
+    sigma, C = 0.9, 1.1
+    key = jax.random.PRNGKey(7)
+    noisy = add_noise(grad, key, sigma, C)
+    (k,) = jax.random.split(key, 1)
+    xi = jax.random.normal(k, (64, 64), jnp.float32)
+    want = (grad["w"].astype(jnp.float32)
+            + sigma * C * xi).astype(jnp.bfloat16)
+    assert bool(jnp.all(noisy["w"] == want))
+
+
 def test_noise_deterministic_in_key():
     grad = {"w": jnp.zeros((8, 8))}
     a = add_noise(grad, jax.random.PRNGKey(7), 1.0, 1.0)
