@@ -7,11 +7,26 @@ sum.  ``auto`` must be no slower than the best fixed strategy on every
 config — the planner's whole point is dominating any global choice.
 
     PYTHONPATH=src python -m benchmarks.strategies_bench [out.json]
+
+``--mesh data:N`` benchmarks the sharded engine instead: auto planned
+*with* the mesh (collective-aware plan + explicitly sharded execution)
+vs auto planned *without*, on alexnet + llama32_1b, recording which
+per-layer decisions the mesh flipped.  On a CPU host the device count is
+forced to N before jax initializes.
+
+    PYTHONPATH=src python -m benchmarks.strategies_bench --mesh data:8
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
+
+if __name__ == "__main__":
+    # A --mesh data:N run on a CPU host needs N devices before the jax
+    # backend initializes.
+    from repro.launch.mesh import force_host_device_count_for
+    force_host_device_count_for(sys.argv)
 
 import numpy as np
 import jax
@@ -102,5 +117,89 @@ def run(out_path: str = "BENCH_strategies.json") -> dict:
     return results
 
 
+MESH_CONFIGS = ("alexnet", "llama32_1b")
+
+
+def run_mesh(spec: str, out_path: str = "BENCH_strategies.json") -> dict:
+    """Sharded-engine benchmark: auto planned with the mesh (collective-
+    aware costs + explicit NamedShardings) vs auto planned without, same
+    global batch.  Entries merge into the strategy benchmark's JSON under
+    ``{config}@{spec}`` keys."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import costmodel
+    from repro.launch.mesh import make_mesh_from_spec
+    from repro.launch.sharding import batch_sharding
+
+    mesh = make_mesh_from_spec(spec)
+    d = costmodel.mesh_data_size(costmodel.mesh_axes(mesh))
+    results = {}
+    if os.path.exists(out_path):
+        results = json.load(open(out_path))
+    for name in MESH_CONFIGS:
+        s = dict(SETTINGS[name])
+        s["B"] = -(-s["B"] // d) * d       # round up to a multiple of d
+        model, params, batch = _setup(name, s)
+        eng0 = PrivacyEngine(model.apply, params, batch,
+                             dp=DPConfig(l2_clip=1.0, strategy="auto"))
+        eng1 = PrivacyEngine(model.apply, params, batch,
+                             dp=DPConfig(l2_clip=1.0, strategy="auto"),
+                             mesh=mesh)
+        repl = NamedSharding(mesh, P())
+        bsh = batch_sharding(batch, mesh)
+        fns = {
+            "auto": jax.jit(lambda p, b, _e=eng0: _e.noisy_grad(p, b)[:2]),
+            "auto_mesh": jax.jit(
+                lambda p, b, _e=eng1: _e.noisy_grad(p, b)[:2],
+                in_shardings=(repl, bsh), out_shardings=repl),
+        }
+        times = {k: float("inf") for k in fns}
+        for rep in range(3):
+            for k, f in fns.items():
+                t = time_fn(f, params, batch, warmup=2 if rep == 0 else 0,
+                            iters=3, reduce="min")
+                times[k] = min(times[k], t)
+        p0, p1 = eng0.plan(), eng1.plan()
+        s0, s1 = p0.sum_methods(), p1.sum_methods()
+        flips = {n: {"without": [p0.layers[n].norm_method, s0[n]],
+                     "with": [p1.layers[n].norm_method, s1[n]]}
+                 for n in p0.layers
+                 if (p0.layers[n].norm_method, s0[n])
+                 != (p1.layers[n].norm_method, s1[n])}
+        key = f"{name}@{spec}"
+        results[key] = {
+            "devices": d,
+            "batch": s["B"],
+            "times_us": times,
+            "mesh_vs_nomesh": times["auto_mesh"] / times["auto"],
+            "plan_flips": flips,
+            "predicted_coll_mb_per_dev": p1.total_coll_bytes / 2**20,
+        }
+        emit(f"strategies/{key}/auto_mesh", times["auto_mesh"],
+             f"ratio={results[key]['mesh_vs_nomesh']:.3f} "
+             f"flips={len(flips)}")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
 if __name__ == "__main__":
-    run(sys.argv[1] if len(sys.argv) > 1 else "BENCH_strategies.json")
+    argv = sys.argv[1:]
+    spec, rest, i = None, [], 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--mesh":
+            if i + 1 >= len(argv):
+                raise SystemExit("--mesh requires a spec, e.g. "
+                                 "--mesh data:8")
+            spec, i = argv[i + 1], i + 2
+        elif a.startswith("--mesh="):
+            spec, i = a.split("=", 1)[1], i + 1
+        else:
+            rest.append(a)
+            i += 1
+    out = rest[0] if rest else "BENCH_strategies.json"
+    if spec:
+        run_mesh(spec, out)
+    else:
+        run(out)

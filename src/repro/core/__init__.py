@@ -5,7 +5,8 @@ extensions) and the DP-SGD machinery built on it.  The plan-first
 functions remain as its functional core and compatibility surface."""
 from repro.core.clipping import (DPConfig, NormCfg, add_noise, dp_gradient,
                                  non_dp_gradient, resolve_microbatches)
-from repro.core.costmodel import ExecPlan
+from repro.core.costmodel import (ExecPlan, check_plan_matches, mesh_axes,
+                                  plan_fingerprint)
 from repro.core.engine import PrivacyEngine
 from repro.core.privacy import PrivacyAccountant, rdp_subsampled_gaussian
 from repro.core.strategies import (STRATEGIES, check_coverage,

@@ -5,11 +5,15 @@ The preferred entry point is :class:`repro.core.engine.PrivacyEngine`
 functional core the engine drives and as a thin compatibility shim for
 pre-engine callers.
 
-Distribution notes (pjit): per-example norms are computed from sharded
-captures — XLA inserts the (B,)-sized reductions over the tensor-parallel
-axis automatically; the clipped gradient sum is reduced over the data axis
-like any gradient.  Noise is generated with a partitionable threefry key,
-so each device materializes only its shard of the noise tensor.
+Distribution notes (pjit): the pipeline is written in the global view, so
+under :class:`~repro.core.engine.PrivacyEngine`'s sharded ``private_step``
+(batch sharded over the data axes, params replicated) XLA partitions it
+automatically — per-example norms are computed on the shard holding the
+example and the clip coefficients see the psum'd global norm; the clipped
+gradient sum is all-reduced over the data axis like any gradient.  Noise
+is generated from the one replicated key against the replicated gradient,
+so every device adds the *same* draw — not independent per-shard noise
+(which would inflate the variance by the shard count).
 """
 from __future__ import annotations
 
@@ -158,10 +162,12 @@ def add_noise(grad_sum, key, noise_multiplier: float, l2_clip: float):
 
 
 def resolve_microbatches(apply_fn, params, batch, cfg: DPConfig,
-                         plan=None) -> int:
+                         plan=None, mesh=None) -> int:
     """Resolve ``cfg.microbatches`` to a concrete count.  ``"auto"`` derives
     it from the full-batch ExecPlan's memory estimates (planned strategies
-    only; fixed strategies have no plan to consult and run unsplit)."""
+    only; fixed strategies have no plan to consult and run unsplit).
+    ``mesh`` makes the consulted plan's estimates per-device, so the split
+    is sized for a device's batch shard rather than the global batch."""
     m = cfg.microbatches
     if m != "auto":
         return int(m)
@@ -169,7 +175,7 @@ def resolve_microbatches(apply_fn, params, batch, cfg: DPConfig,
         return 1
     if plan is None:
         plan = costmodel.get_plan(apply_fn, params, batch,
-                                  **cfg.planner_opts())
+                                  mesh=mesh, **cfg.planner_opts())
     B = jax.tree.leaves(batch)[0].shape[0]
     return costmodel.auto_microbatches(plan, B, cfg.norm.mem_budget)
 

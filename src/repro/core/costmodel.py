@@ -33,6 +33,31 @@ Plans are cached on (model identity, batch/param shapes, knobs): steady
 state training re-plans nothing and never re-probes — see
 :func:`get_plan`.  Defaults target TPU v5e; the memory budget guards HBM
 blow-ups on the materializing paths (the Gram paths are chunk-bounded).
+
+Mesh-aware planning
+-------------------
+When a device mesh is supplied (a ``jax.sharding.Mesh``, a
+``"data:8,model:2"`` spec string, or an axes mapping — see
+:func:`mesh_axes`), every per-layer estimate becomes *per device*: the
+batch-linear FLOPs and scratch shrink by the data-parallel degree (the
+memory budget is per-device HBM), and each candidate realization is
+additionally charged the collective traffic it induces, following the
+communication patterns of distributed DP-SGD (Bu et al. 2022):
+
+  * non-materializing norms (gram/ghost/segsum/rank1) all-reduce the
+    per-example *scalar* norms — ``B·4`` bytes per layer;
+  * materializing (stash) norms put per-example gradients on the
+    gradient-sync path — the per-device stash crosses the ring;
+  * every group pays its parameter-sized grad-sync all-reduce, and a
+    shared weighted backward pays that psum a second time.
+
+Bytes convert to FLOP-equivalents at :data:`COLLECTIVE_FLOPS_PER_BYTE`,
+so plan selection can flip per layer under a mesh (e.g. a mid-network
+conv whose materializing norm wins on FLOPs loses once its per-example
+grads are charged ring traffic).  The mesh shape is folded into the plan
+fingerprint and serialized payload: a plan loaded on a different
+topology fails loudly (:func:`check_plan_matches`) instead of executing
+a stale layout.
 """
 from __future__ import annotations
 
@@ -56,6 +81,14 @@ BYTES = 4
 # contractions it shares with `contrib`; expressed as a multiple of the
 # total per-layer wgrad FLOPs (forward ≈ Σ wgrad, dx-chain ≈ Σ wgrad).
 BACKWARD_FIXED_FACTOR = 2.0
+# Interconnect cost of one collective byte, in FLOP-equivalents.  TPU
+# v5e: ~197 TFLOP/s bf16 against ~400 GB/s aggregate ICI per chip ≈ 500
+# FLOPs per byte on the wire; DCN-attached data parallelism is far worse.
+COLLECTIVE_FLOPS_PER_BYTE = 512.0
+# Mesh axes treated as pure data parallelism (batch-sharded); every other
+# axis is model parallelism.
+DATA_AXIS_NAMES = ("pod", "data", "batch")
+
 # contrib for a local_vjp layer replays the layer's VJP once *per
 # example* under vmap — for scan-based layers (SSM recurrences) the
 # vmapped per-example re-trace lowers far worse than the batched
@@ -64,6 +97,55 @@ BACKWARD_FIXED_FACTOR = 2.0
 # model into the shared weighted backward.
 LOCAL_VJP_CONTRIB_PENALTY = 4.0
 PLAN_CACHE_SIZE = 16
+
+
+# ---------------------------------------------------------------------------
+# Mesh normalization: every planner entry point takes ``mesh`` as a
+# jax.sharding.Mesh, a "data:8,model:2" spec string, an axes mapping, or
+# an (("data", 8), ...) tuple — all normalized to the tuple form, which
+# is hashable (cache keys), JSON-able (plan payloads), and fingerprintable.
+
+
+def mesh_axes(mesh) -> tuple:
+    """Normalize a mesh description to ``(("data", 8), ("model", 2))``."""
+    if mesh is None:
+        return ()
+    if isinstance(mesh, str):
+        out = []
+        for part in mesh.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            name, sep, size = part.partition(":")
+            if not sep or not size.strip().isdigit():
+                raise ValueError(
+                    f"bad mesh spec {mesh!r}; expected 'data:8' or "
+                    f"'data:4,model:2'")
+            out.append((name.strip(), int(size)))
+        return tuple(out)
+    if isinstance(mesh, Mapping):
+        return tuple((str(k), int(v)) for k, v in mesh.items())
+    shape = getattr(mesh, "shape", None)
+    if isinstance(shape, Mapping):        # jax.sharding.Mesh
+        return tuple((str(k), int(v)) for k, v in shape.items())
+    return tuple((str(k), int(v)) for k, v in mesh)
+
+
+def mesh_data_size(axes: tuple) -> int:
+    d = 1
+    for name, size in axes:
+        if name in DATA_AXIS_NAMES:
+            d *= int(size)
+    return d
+
+
+def format_mesh(axes: tuple) -> str:
+    return ("x".join(f"{n}={s}" for n, s in axes)) if axes else "(no mesh)"
+
+
+def _ring(d: int) -> float:
+    """Per-device bytes-on-the-wire multiplier of a ring all-reduce."""
+    return 2.0 * (d - 1) / d if d > 1 else 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -137,7 +219,12 @@ def embed_norm_method(T: int, D: int, B: int | None = None,
 
 @dataclasses.dataclass(frozen=True)
 class LayerPlan:
-    """Per-tap decision + cost estimates (FLOPs, batch included)."""
+    """Per-tap decision + cost estimates.
+
+    All estimates are *per device*: with no mesh that is the whole batch;
+    under a mesh the batch-linear FLOPs and scratch are for this device's
+    batch shard, and ``coll_bytes`` is this device's share of the
+    collective traffic the chosen realization induces per step."""
 
     name: str
     kind: str
@@ -148,6 +235,9 @@ class LayerPlan:
     wgrad_flops: float        # this layer's share of a weighted backward
     stash_bytes: float = 0.0  # size of the (B, *param) grads if stashed
     fallback_norm: str = ""   # best no-stash method (cumulative demotion)
+    param_bytes: float = 0.0  # parameter bytes (grad-sync unit)
+    coll_bytes: float = 0.0   # predicted collective bytes per step
+    ex_per_dev: float = 0.0   # examples on one device's batch shard
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,7 +250,7 @@ class GroupPlan:
     sum_method: str                # stash | contrib | backward
 
 
-PLAN_FORMAT_VERSION = 1
+PLAN_FORMAT_VERSION = 2   # v2: mesh axes, batch signature, collective bytes
 
 _META_FIELDS = ("kind", "path", "param_key", "bias_key", "w_transposed",
                 "segmented", "scanned", "shared", "static")
@@ -210,8 +300,11 @@ class ExecPlan:
     total_norm_flops: float
     total_contrib_flops: float
     tap_shapes: dict = dataclasses.field(default_factory=dict)
-    capture_bytes: float = 0.0     # captures + tap cotangents, whole batch
+    capture_bytes: float = 0.0     # captures + tap cotangents, per device
     fingerprint: str = ""
+    mesh: tuple = ()               # (("data", 8), ...) this plan targets
+    batch_sig: tuple = ()          # batch shape signature the plan was built on
+    total_coll_bytes: float = 0.0  # per-device collective bytes per step
     _anchor: Any = None            # pins apply_fn identity while cached
 
     def describe(self) -> str:
@@ -235,17 +328,21 @@ class ExecPlan:
                    for g in self.groups if g.sum_method == "stash")
 
     def explain(self) -> str:
-        """Per-layer table of the chosen realizations and predicted costs."""
+        """Per-layer table of the chosen realizations and predicted costs
+        (per device; the ``coll MB`` column is the predicted collective
+        traffic the realization induces on the plan's mesh)."""
         sums = self.sum_methods()
         header = (f"{'layer':<28} {'kind':<10} {'norm':<8} {'sum':<9} "
-                  f"{'norm MF':>9} {'sum MF':>9} {'stash MB':>9}")
+                  f"{'norm MF':>9} {'sum MF':>9} {'stash MB':>9} "
+                  f"{'coll MB':>9}")
         lines = [header, "-" * len(header)]
         for n, lp in self.layers.items():
             stash_mb = lp.stash_bytes / 2**20 if lp.stash else 0.0
             lines.append(
                 f"{n:<28} {lp.kind:<10} {lp.norm_method:<8} "
                 f"{sums.get(n, '?'):<9} {lp.norm_flops / 1e6:>9.2f} "
-                f"{lp.contrib_flops / 1e6:>9.2f} {stash_mb:>9.2f}")
+                f"{lp.contrib_flops / 1e6:>9.2f} {stash_mb:>9.2f} "
+                f"{lp.coll_bytes / 2**20:>9.2f}")
         passes = ("2 fwd + 2 bwd (shared weighted backward)"
                   if self.needs_backward else "1 fwd + 1 bwd")
         lines.append("-" * len(header))
@@ -255,6 +352,9 @@ class ExecPlan:
             f"{self.total_contrib_flops / 1e6:.2f} MF; captures "
             f"{self.capture_bytes / 2**20:.2f} MB, peak stash "
             f"{self.peak_stash_bytes() / 2**20:.2f} MB")
+        lines.append(
+            f"mesh: {format_mesh(self.mesh)}; predicted collectives "
+            f"{self.total_coll_bytes / 2**20:.2f} MB/step/device")
         if self.fingerprint:
             lines.append(f"fingerprint: {self.fingerprint}")
         return "\n".join(lines)
@@ -267,9 +367,12 @@ class ExecPlan:
         return {
             "format": PLAN_FORMAT_VERSION,
             "fingerprint": self.fingerprint,
+            "mesh": _jsonable(self.mesh),
+            "batch_sig": _jsonable(self.batch_sig),
             "needs_backward": self.needs_backward,
             "total_norm_flops": self.total_norm_flops,
             "total_contrib_flops": self.total_contrib_flops,
+            "total_coll_bytes": self.total_coll_bytes,
             "capture_bytes": self.capture_bytes,
             "layers": {n: dataclasses.asdict(lp)
                        for n, lp in self.layers.items()},
@@ -312,7 +415,10 @@ class ExecPlan:
                    total_contrib_flops=p["total_contrib_flops"],
                    tap_shapes=tap_shapes,
                    capture_bytes=p["capture_bytes"],
-                   fingerprint=p["fingerprint"])
+                   fingerprint=p["fingerprint"],
+                   mesh=_retuple(p.get("mesh", [])),
+                   batch_sig=_retuple(p.get("batch_sig", [])),
+                   total_coll_bytes=p.get("total_coll_bytes", 0.0))
 
     @classmethod
     def from_json(cls, s: str) -> "ExecPlan":
@@ -341,7 +447,7 @@ def _tree_elems(tree) -> int:
 def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
                 *, norm_method: str, embed_method: str, conv_norm: str,
                 mem_budget: int, vocab: int | None = None,
-                params_sub=None) -> LayerPlan:
+                params_sub=None, mesh: tuple = ()) -> LayerPlan:
     """Costs for one tap.  Stacked (scanned) applications multiply the
     per-application cost; shared stacked dense/scale layers fold the stack
     into the sequence axis first (matching kinds.apply_kind semantics).
@@ -349,47 +455,74 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
     The auto choice minimizes the *joint* norm + sum cost: a norm that
     materializes per-example grads makes the sum phase a free (B,)-weighted
     reduction over the stash, so ``stream``/``pe`` is charged once while
-    ``gram``/``ghost`` is charged norm + contraction."""
+    ``gram``/``ghost`` is charged norm + contraction.
+
+    Under a mesh all estimates are per device (batch-linear terms use the
+    per-device batch shard; the memory budget is per-device HBM), and the
+    candidates additionally pay their collective traffic in
+    FLOP-equivalents: stash candidates put per-example grads on the wire,
+    non-materializing norms all-reduce ``B`` scalars."""
     k = meta.scanned
     dy_shape = tuple(dy_sh.shape)
     stack = _prod(dy_shape[:k])
     app_dy = dy_shape[k:]
+    d = mesh_data_size(mesh)
+    ring = _ring(d)
+
+    def _shard(B: int) -> int:
+        return max(1, -(-int(B) // d))
+
+    def _scal_cost(B: int) -> float:
+        # all-reduce of the per-example scalar norms: (B,) float32
+        return COLLECTIVE_FLOPS_PER_BYTE * B * BYTES * ring
+
+    def _move_cost(stash_bytes: float) -> float:
+        # per-device per-example grads crossing the grad-sync ring
+        return COLLECTIVE_FLOPS_PER_BYTE * stash_bytes * ring
 
     if meta.kind == "dense" and meta.segmented:
         x_shape = tuple(cap_sh["x"].shape)[k:]
         S, Di, Do = x_shape[-2], x_shape[-1], app_dy[-1]
         G = _prod(x_shape[:-2]) * stack
         B = meta.static["n_examples"]
+        Bl = _shard(B)
         m = (norm_method if norm_method not in ("auto", "pallas")
-             else seg_norm_method(S, Di, Do, B, G, mem_budget))
-        nf = (G * S * S * (Di + Do + B) if m == "gram" else G * B * Di * Do)
+             else seg_norm_method(S, Di, Do, Bl, G, mem_budget))
+        nf = (G * S * S * (Di + Do + Bl) if m == "gram" else G * Bl * Di * Do)
         cf = 2.0 * G * S * Di * Do
         return LayerPlan(name, "seg_dense", m, False, nf, cf, cf,
-                         stash_bytes=B * G * Di * Do * BYTES)
+                         stash_bytes=Bl * G * Di * Do * BYTES,
+                         param_bytes=G * Di * Do * BYTES, ex_per_dev=Bl)
 
     if meta.kind == "dense":
         x_shape = tuple(cap_sh["x"].shape)[k:]
         B, Di, Do = x_shape[0], x_shape[-1], app_dy[-1]
+        Bl = _shard(B)
         T = _prod(x_shape[1:-1])
         mult = stack
         if meta.shared and k:
             T, mult = T * stack, 1        # folded into the sequence axis
-        cf = 2.0 * B * T * Di * Do * mult
+        cf = 2.0 * Bl * T * Di * Do * mult
+        pbytes = Di * Do * BYTES * mult
         # Stashing keeps (B, *stack, Di, Do) alive until the sum phase;
         # the un-stashed stream norm reduces one stacked layer at a time
         # (kinds.apply_kind's sequential loop), so it only needs one
         # layer's scratch but pays the contraction again in phase 2.
-        mem_stash = B * Di * Do * BYTES * mult
-        mem_layer = B * Di * Do * BYTES
+        mem_stash = Bl * Di * Do * BYTES * mult
+        mem_layer = Bl * Di * Do * BYTES
         stash = False
         fallback = norm_method
         if norm_method == "auto":
             if T == 1:
                 m = fallback = "rank1"
             else:
-                gram_total = 2.0 * T * T * (Di + Do) + 2.0 * T * Di * Do
-                stream_stash = 4.0 * T * Di * Do
-                stream_again = stream_stash + 2.0 * T * Di * Do
+                per_ex = Bl * mult
+                gram_total = (2.0 * T * T * (Di + Do)
+                              + 2.0 * T * Di * Do) * per_ex + _scal_cost(B)
+                stream_stash = (4.0 * T * Di * Do * per_ex
+                                + _move_cost(mem_stash))
+                stream_again = (4.0 * T * Di * Do
+                                + 2.0 * T * Di * Do) * per_ex + _scal_cost(B)
                 fallback = ("stream" if stream_again < gram_total
                             and mem_layer <= mem_budget else "gram")
                 if stream_stash < gram_total and mem_stash <= mem_budget:
@@ -404,28 +537,35 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
         nf = {"gram": 2.0 * T * T * (Di + Do),
               "pallas": 2.0 * T * T * (Di + Do),
               "stream": 4.0 * T * Di * Do,
-              "rank1": 2.0 * T * (Di + Do)}[m] * B * mult
+              "rank1": 2.0 * T * (Di + Do)}[m] * Bl * mult
         return LayerPlan(name, "dense", m, stash, nf, cf, cf,
-                         stash_bytes=mem_stash, fallback_norm=fallback)
+                         stash_bytes=mem_stash, fallback_norm=fallback,
+                         param_bytes=pbytes, ex_per_dev=Bl)
 
     if meta.kind == "conv":
         st = meta.static
         x_shape = tuple(cap_sh["x"].shape)[k:]
         B, C = x_shape[0], x_shape[1]
+        Bl = _shard(B)
         D = app_dy[1]
         T = _prod(app_dy[2:])
         K = _prod(st["kernel_shape"][2:])
         g = max(st.get("groups", 1), 1)
         F, Dg = (C // g) * K, D // g
-        cf = 2.0 * B * T * F * Dg * g * stack
-        mem_stash = B * D * (C // g) * K * BYTES * stack
-        mem_layer = B * D * (C // g) * K * BYTES
+        cf = 2.0 * Bl * T * F * Dg * g * stack
+        pbytes = D * (C // g) * K * BYTES * stack
+        mem_stash = Bl * D * (C // g) * K * BYTES * stack
+        mem_layer = Bl * D * (C // g) * K * BYTES
         stash = False
         fallback = conv_norm
         if conv_norm == "auto":
-            ghost_total = (2.0 * T * T * (F + Dg) + 2.0 * T * F * Dg) * g
-            pe_stash = 4.0 * T * F * Dg * g
-            pe_again = pe_stash + 2.0 * T * F * Dg * g
+            per_ex = Bl * stack
+            ghost_total = ((2.0 * T * T * (F + Dg) + 2.0 * T * F * Dg) * g
+                           * per_ex + _scal_cost(B))
+            pe_stash = (4.0 * T * F * Dg * g * per_ex
+                        + _move_cost(mem_stash))
+            pe_again = ((4.0 * T * F * Dg + 2.0 * T * F * Dg) * g * per_ex
+                        + _scal_cost(B))
             fallback = ("pe" if pe_again < ghost_total
                         and mem_layer <= mem_budget else "ghost")
             if pe_stash < ghost_total and mem_stash <= mem_budget:
@@ -435,38 +575,55 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
         else:
             m = conv_norm
             stash = m == "pe" and mem_stash <= mem_budget
-        nf = (2.0 * B * T * T * (F + Dg) * g if m == "ghost"
-              else 4.0 * B * T * F * Dg * g) * stack
+        nf = (2.0 * Bl * T * T * (F + Dg) * g if m == "ghost"
+              else 4.0 * Bl * T * F * Dg * g) * stack
         return LayerPlan(name, "conv", m, stash, nf, cf, cf,
-                         stash_bytes=mem_stash, fallback_norm=fallback)
+                         stash_bytes=mem_stash, fallback_norm=fallback,
+                         param_bytes=pbytes, ex_per_dev=Bl)
 
     if meta.kind == "embed":
         ids_shape = tuple(cap_sh["ids"].shape)[k:]
         B = ids_shape[0]
+        Bl = _shard(B)
         T = _prod(ids_shape[1:])
         D = app_dy[-1]
-        # stack multiplies the stashed (B, V, D) scratch for the budget
-        m = (embed_norm_method(T, D, B * stack, vocab)
-             if embed_method == "auto" else embed_method)
-        if m == "gram":
-            nf = 2.0 * B * T * T * D
-        elif m == "pe":
-            nf = B * (T * D + (vocab or T) * D)
+        V = vocab or T
+        pbytes = V * D * BYTES * stack
+        stash_bytes = Bl * V * D * BYTES * stack
+        seg_f = (T * max(math.log2(max(T, 2)), 1.0) + 2.0 * T * D)
+        costs = {"pe": Bl * (T * D + V * D) * stack + _move_cost(stash_bytes),
+                 "gram": 2.0 * Bl * T * T * D * stack + _scal_cost(B),
+                 "segsum": Bl * seg_f * stack + _scal_cost(B)}
+        if embed_method != "auto":
+            m = embed_method
+        elif not mesh:
+            # stack multiplies the stashed (B, V, D) scratch for the budget
+            m = embed_norm_method(T, D, B * stack, vocab)
         else:
-            nf = B * (T * max(math.log2(max(T, 2)), 1.0) + 2.0 * T * D)
-        nf *= stack
-        cf = 2.0 * B * T * D * stack
+            # Mesh-aware: the stash's ring traffic competes with the
+            # scalar all-reduce of the ghost realizations.
+            m = min(costs, key=costs.get)
+            if m == "pe" and stash_bytes > EMBED_PE_BUDGET:
+                m = "gram" if T <= 32 else "segsum"
+        nf = {"gram": 2.0 * Bl * T * T * D,
+              "pe": Bl * (T * D + V * D),
+              "segsum": Bl * seg_f}[m] * stack
+        cf = 2.0 * Bl * T * D * stack
         fb = (m if m != "pe" else ("gram" if T <= 32 else "segsum"))
         return LayerPlan(name, "embed", m, m == "pe", nf, cf, cf,
-                         stash_bytes=B * (vocab or T) * D * BYTES * stack,
-                         fallback_norm=fb)
+                         stash_bytes=stash_bytes, fallback_norm=fb,
+                         param_bytes=pbytes, ex_per_dev=Bl)
 
     if meta.kind == "scale":
         B = app_dy[0] if app_dy else 1
-        n = _prod(app_dy) * stack
-        return LayerPlan(name, "scale", "pe", True, 2.0 * n, 2.0 * n,
-                         2.0 * n, stash_bytes=B * app_dy[-1] * BYTES * stack
-                         if app_dy else 0.0)
+        Bl = _shard(B)
+        n = 2.0 * Bl * (_prod(app_dy) // max(B, 1)) * stack
+        return LayerPlan(name, "scale", "pe", True, n, n, n,
+                         stash_bytes=Bl * app_dy[-1] * BYTES * stack
+                         if app_dy else 0.0,
+                         param_bytes=(app_dy[-1] * BYTES * stack
+                                      if app_dy else 0.0),
+                         ex_per_dev=Bl)
 
     # local_vjp: a layer-local VJP under vmap.  The norm phase
     # materializes per-example grads and stashes them when the (B, *param)
@@ -477,15 +634,17 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
     # backward) — which is what can tip the plan into the shared
     # weighted backward.
     B = app_dy[0] if app_dy else 1
-    n = 2.0 * _prod(app_dy) * stack
+    Bl = _shard(B)
+    n = 2.0 * Bl * (_prod(app_dy) // max(B, 1)) * stack
     # params_sub at meta.path already carries the stacked axis in its leaf
     # shapes for scanned layers, so B * elems is the full stash size.
     psize = _tree_elems(params_sub) if params_sub is not None else 0
-    stash_mem = B * psize * BYTES
+    stash_mem = Bl * psize * BYTES
     stash = psize == 0 or stash_mem <= mem_budget
     return LayerPlan(name, meta.kind, "pe", stash, n,
                      LOCAL_VJP_CONTRIB_PENALTY * n, n,
-                     stash_bytes=stash_mem)
+                     stash_bytes=stash_mem, param_bytes=psize * BYTES,
+                     ex_per_dev=Bl)
 
 
 def _vocab_of(meta: LayerMeta, params) -> int | None:
@@ -544,15 +703,19 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
                    norm_method: str = "auto", embed_method: str = "auto",
                    conv_norm: str = "auto",
                    mem_budget: int = STREAM_MEM_BUDGET,
-                   overrides=None) -> ExecPlan:
+                   overrides=None, mesh=None) -> ExecPlan:
     """Build the per-layer plan from probed shapes.
 
     Fixed ``norm_method`` / ``embed_method`` / ``conv_norm`` override the
     analytic choice uniformly (the planner still fills in cost estimates);
     ``overrides`` pins individual layers by tap-name glob and wins over
-    both.
+    both.  ``mesh`` (anything :func:`mesh_axes` accepts) switches every
+    estimate to per-device and charges candidates their collective bytes.
     """
     overrides = normalize_overrides(overrides)
+    ms = mesh_axes(mesh)
+    d = mesh_data_size(ms)
+    ring = _ring(d)
     layers: dict[str, LayerPlan] = {}
     by_path: dict[tuple, list] = {}
     for name, meta in metas.items():
@@ -568,7 +731,7 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
             norm_method=ov or norm_method, embed_method=ov or embed_method,
             conv_norm=ov or conv_norm, mem_budget=mem_budget,
             vocab=_vocab_of(meta, params) if meta.kind == "embed" else None,
-            params_sub=psub)
+            params_sub=psub, mesh=ms)
         by_path.setdefault(meta.path, []).append(name)
 
     total_wgrad = sum(lp.wgrad_flops for lp in layers.values())
@@ -576,8 +739,13 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
     # AND computes every parameter's wgrad — including those of groups
     # that keep their stash/contraction, whose share is pure waste.  So
     # switching the candidate set to the backward only pays off when the
-    # contractions it replaces exceed fixed + total_wgrad.
-    backward_cost = (BACKWARD_FIXED_FACTOR + 1.0) * total_wgrad
+    # contractions it replaces exceed fixed + total_wgrad.  Under a mesh
+    # it also psums the whole gradient a second time — sized by *unique*
+    # parameters (taps sharing a path sync one gradient, not one each).
+    unique_pbytes = sum(max(layers[n].param_bytes for n in names)
+                        for names in by_path.values())
+    backward_cost = (BACKWARD_FIXED_FACTOR + 1.0) * total_wgrad \
+        + COLLECTIVE_FLOPS_PER_BYTE * ring * unique_pbytes
 
     groups: list[GroupPlan] = []
     for path, names in sorted(by_path.items()):
@@ -640,6 +808,25 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
             groups[gi] = dataclasses.replace(groups[gi],
                                              sum_method="backward")
 
+    # Final per-layer collective prediction for the *chosen* realization:
+    # norm phase (stash movement vs the scalar all-reduce of the *global*
+    # (B,) norms, the same term _scal_cost charged during selection) plus
+    # this layer's share of its group's grad-sync psum — one sync per
+    # parameter, split across the taps that share it, doubled for
+    # weighted-backward groups.
+    if ring > 0.0:
+        for g in groups:
+            group_pb = max(layers[n].param_bytes for n in g.members)
+            sync_each = group_pb * ring \
+                * (2.0 if g.sum_method == "backward" else 1.0) \
+                / len(g.members)
+            for name in g.members:
+                lp = layers[name]
+                norm_coll = (lp.stash_bytes if lp.stash
+                             else lp.ex_per_dev * d * BYTES) * ring
+                layers[name] = dataclasses.replace(
+                    lp, coll_bytes=norm_coll + sync_each)
+
     capture_bytes = 0.0
     for name in metas:
         capture_bytes += sum(_nbytes(leaf)
@@ -647,13 +834,16 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
         ts = tap_shapes.get(name)
         if ts is not None:
             capture_bytes += 2.0 * _nbytes(ts)   # tap zeros + cotangent
+    capture_bytes /= d   # captures are batch-sharded: per-device share
 
     return ExecPlan(
         groups=tuple(groups), layers=layers, metas=metas,
         make_taps=make_taps, needs_backward=needs_backward,
         total_norm_flops=sum(lp.norm_flops for lp in layers.values()),
         total_contrib_flops=sum(lp.contrib_flops for lp in layers.values()),
-        tap_shapes=dict(tap_shapes), capture_bytes=capture_bytes)
+        tap_shapes=dict(tap_shapes), capture_bytes=capture_bytes,
+        mesh=ms,
+        total_coll_bytes=sum(lp.coll_bytes for lp in layers.values()))
 
 
 # ---------------------------------------------------------------------------
@@ -744,17 +934,70 @@ def load_plan_store(path: str) -> int:
     return len(plans)
 
 
+def _sig_summary(sig) -> str:
+    return ", ".join(f"{k}{tuple(s)}:{dt}" for k, s, dt in sig) or "(empty)"
+
+
+def check_plan_matches(plan: ExecPlan, *, fingerprint: str | None = None,
+                       mesh=None, batch_sig=None):
+    """Validate a deserialized/injected plan against the live context,
+    naming the offending field — mesh shape, batch shape, or fingerprint —
+    so a stale plan fails loudly instead of executing a stale layout."""
+    if mesh is not None:
+        ms = mesh_axes(mesh)
+        if tuple(plan.mesh) != ms:
+            raise ValueError(
+                f"stale ExecPlan: mesh shape mismatch — plan "
+                f"{plan.fingerprint or '<unfingerprinted>'} was built for "
+                f"mesh {format_mesh(tuple(plan.mesh))}, this process runs "
+                f"{format_mesh(ms)}; re-plan for this topology")
+    if batch_sig is not None and plan.batch_sig \
+            and tuple(plan.batch_sig) != tuple(batch_sig):
+        raise ValueError(
+            f"stale ExecPlan: batch shape mismatch — plan "
+            f"{plan.fingerprint or '<unfingerprinted>'} was built for "
+            f"[{_sig_summary(plan.batch_sig)}], this step feeds "
+            f"[{_sig_summary(batch_sig)}]")
+    if fingerprint and plan.fingerprint and plan.fingerprint != fingerprint:
+        raise ValueError(
+            f"stale ExecPlan: fingerprint mismatch — plan "
+            f"{plan.fingerprint} != expected {fingerprint} (model code, "
+            f"param shapes, or planner knobs changed)")
+
+
+def _opts_tuple(norm_method, embed_method, conv_norm, mem_budget,
+                overrides, mesh) -> tuple:
+    return (norm_method, embed_method, conv_norm, mem_budget,
+            normalize_overrides(overrides), mesh_axes(mesh))
+
+
+def plan_fingerprint(apply_fn, params, batch, *, norm_method: str = "auto",
+                     embed_method: str = "auto", conv_norm: str = "auto",
+                     mem_budget: int = STREAM_MEM_BUDGET,
+                     overrides=None, mesh=None) -> str:
+    """The fingerprint :func:`get_plan` would key this request on — same
+    knob normalization, no probe."""
+    return model_fingerprint(
+        apply_fn, params, batch,
+        _opts_tuple(norm_method, embed_method, conv_norm, mem_budget,
+                    overrides, mesh))
+
+
 def get_plan(apply_fn, params, batch, *, norm_method: str = "auto",
              embed_method: str = "auto", conv_norm: str = "auto",
              mem_budget: int = STREAM_MEM_BUDGET,
-             overrides=None) -> ExecPlan:
+             overrides=None, mesh=None) -> ExecPlan:
     """Cached planner entry point.  The anchor reference pinned in the
     cached plan keeps ``id(apply_fn.__self__)`` stable for the entry's
     lifetime, so a recycled id can never alias a different model.  A
     fingerprint hit in the cross-process plan store short-circuits the
-    probe entirely."""
-    ov = normalize_overrides(overrides)
-    opts = (norm_method, embed_method, conv_norm, mem_budget, ov)
+    probe entirely.  ``mesh`` participates in both the cache key and the
+    fingerprint, so plans are topology-keyed; a store that holds this
+    batch's plan for a *different* topology raises instead of silently
+    re-planning over a stale layout."""
+    opts = _opts_tuple(norm_method, embed_method, conv_norm, mem_budget,
+                       overrides, mesh)
+    ov, ms = opts[4], opts[5]
     key = plan_cache_key(apply_fn, params, batch, opts)
     plan = _PLAN_CACHE.get(key)
     if plan is not None:
@@ -763,13 +1006,26 @@ def get_plan(apply_fn, params, batch, *, norm_method: str = "auto",
     fp = model_fingerprint(apply_fn, params, batch, opts)
     plan = _PLAN_STORE.get(fp)
     if plan is None:
+        sig = _shape_sig(batch)
+        for cand in _PLAN_STORE.values():
+            if tuple(cand.batch_sig) != sig or tuple(cand.mesh) == ms:
+                continue
+            # Only a store entry that is *this* request's plan on another
+            # topology blocks planning: re-key the request under the
+            # candidate's mesh and compare fingerprints, so an unrelated
+            # model that merely shares the batch shape never trips this.
+            cand_opts = opts[:5] + (tuple(cand.mesh),)
+            if cand.fingerprint == model_fingerprint(apply_fn, params,
+                                                     batch, cand_opts):
+                check_plan_matches(cand, mesh=ms)
         make_taps, metas, tap_shapes, cap_shapes = probe(
             apply_fn, params, batch, return_captures=True)
         plan = plan_execution(
             metas, cap_shapes, tap_shapes, make_taps, params,
             norm_method=norm_method, embed_method=embed_method,
-            conv_norm=conv_norm, mem_budget=mem_budget, overrides=ov)
-        plan = dataclasses.replace(plan, fingerprint=fp)
+            conv_norm=conv_norm, mem_budget=mem_budget, overrides=ov,
+            mesh=ms)
+        plan = dataclasses.replace(plan, fingerprint=fp, batch_sig=sig)
     object.__setattr__(plan, "_anchor", getattr(apply_fn, "__self__",
                                                 apply_fn))
     _PLAN_CACHE[key] = plan

@@ -23,6 +23,18 @@ first-class value —
 
 Steady state executes exactly one forward and one backward per step for
 ``strategy="auto"`` (counters in :data:`repro.core.tapper.STATS`).
+
+Sharded execution: pass ``mesh=`` a ``jax.sharding.Mesh`` and the plan
+is built mesh-aware (per-device memory, collective-bytes cost terms, the
+mesh folded into the fingerprint) while ``private_step`` runs under
+``jax.jit`` with explicit ``NamedSharding``s — the batch sharded over
+the data axes, params/optimizer state/PRNG key replicated.  Per-example
+norms are reduced globally by SPMD (clip coefficients see the psum'd
+global norm) and the noise is generated from the one replicated key, so
+every device adds the *same* noise instead of per-shard draws: the
+sharded step equals the single-device step up to reduction order.  A
+mesh *spec* ("data:8", axes dict) is also accepted for planning-only
+use on hosts without the devices.
 """
 from __future__ import annotations
 
@@ -73,7 +85,13 @@ class PrivacyEngine:
                   Poisson sampling rate (an accountant is built) or an
                   existing :class:`PrivacyAccountant`.
       plan:       inject a pre-built or deserialized ExecPlan (must match
-                  the model and shapes; validated at execution).
+                  the model, shapes, and mesh; validated up front with
+                  named-field errors and again at execution).
+      mesh:       a ``jax.sharding.Mesh`` — plans become mesh-aware and
+                  ``private_step`` runs sharded (batch over the data
+                  axes, params/opt/key replicated).  A mesh *spec*
+                  (``"data:8"``, axes dict/tuple) plans for that topology
+                  without requiring the devices (no sharded execution).
     """
 
     def __init__(self, apply_fn: Callable, params, batch_spec,
@@ -81,7 +99,8 @@ class PrivacyEngine:
                  lr=1e-3, weight_decay: float = 0.0,
                  sampling_rate: float | None = None,
                  accountant: PrivacyAccountant | None = None,
-                 plan: costmodel.ExecPlan | None = None):
+                 plan: costmodel.ExecPlan | None = None,
+                 mesh=None):
         self.apply_fn = apply_fn
         self.dp = dp if dp is not None else DPConfig()
         self._params_spec = _spec_of(params)
@@ -94,16 +113,43 @@ class PrivacyEngine:
                 sampling_rate=sampling_rate,
                 noise_multiplier=self.dp.noise_multiplier)
         self.accountant = accountant
+        self.mesh = mesh if isinstance(mesh, jax.sharding.Mesh) else None
+        self._mesh_axes = costmodel.mesh_axes(mesh)
+        if self.mesh is not None:
+            d = costmodel.mesh_data_size(self._mesh_axes)
+            for kp, leaf in jax.tree_util.tree_leaves_with_path(
+                    self._batch_spec):
+                if leaf.shape and leaf.shape[0] % d:
+                    raise ValueError(
+                        f"batch leaf {jax.tree_util.keystr(kp)} leading dim "
+                        f"{leaf.shape[0]} is not divisible by the mesh's "
+                        f"data-parallel degree {d} "
+                        f"({costmodel.format_mesh(self._mesh_axes)})")
+        if plan is not None and self.dp.strategy == "auto":
+            # Fail loudly *now* on a stale injected plan, naming the
+            # offending field (mesh shape / batch shape / fingerprint).
+            costmodel.check_plan_matches(
+                plan, mesh=self._mesh_axes,
+                batch_sig=costmodel._shape_sig(self._batch_spec),
+                fingerprint=self._fingerprint())
         self._plan = plan
 
     # -- planning ----------------------------------------------------------
+
+    def _planner_opts(self) -> dict:
+        return dict(self.dp.planner_opts(), mesh=self._mesh_axes)
+
+    def _fingerprint(self) -> str:
+        return costmodel.plan_fingerprint(
+            self.apply_fn, self._params_spec, self._batch_spec,
+            **self._planner_opts())
 
     def plan(self) -> costmodel.ExecPlan:
         """The full-batch ExecPlan (built once; cache/store hits are free)."""
         if self._plan is None:
             self._plan = costmodel.get_plan(
                 self.apply_fn, self._params_spec, self._batch_spec,
-                **self.dp.planner_opts())
+                **self._planner_opts())
         return self._plan
 
     def explain(self) -> str:
@@ -111,7 +157,9 @@ class PrivacyEngine:
         header = (f"PrivacyEngine: strategy={self.dp.strategy} "
                   f"C={self.dp.l2_clip} sigma={self.dp.noise_multiplier} "
                   f"microbatches={self.microbatches()}"
-                  + ("" if self.dp.microbatches != "auto" else " (auto)"))
+                  + ("" if self.dp.microbatches != "auto" else " (auto)")
+                  + (f" mesh={costmodel.format_mesh(self._mesh_axes)}"
+                     if self._mesh_axes else ""))
         if self.dp.strategy != "auto":
             return (header + f"\nfixed strategy {self.dp.strategy!r}: the "
                     "planner is bypassed; plan below is advisory.\n"
@@ -136,7 +184,8 @@ class PrivacyEngine:
         if self.dp.microbatches == "auto" and self.dp.strategy == "auto":
             plan = self.plan()
         return resolve_microbatches(self.apply_fn, self._params_spec,
-                                    self._batch_spec, self.dp, plan=plan)
+                                    self._batch_spec, self.dp, plan=plan,
+                                    mesh=self._mesh_axes)
 
     def _exec_plan(self) -> costmodel.ExecPlan | None:
         """The plan matching the shapes the step actually executes: the
@@ -151,7 +200,7 @@ class PrivacyEngine:
                 (s.shape[0] // m,) + tuple(s.shape[1:]), s.dtype),
             self._batch_spec)
         return costmodel.get_plan(self.apply_fn, self._params_spec, mb_spec,
-                                  **self.dp.planner_opts())
+                                  **self._planner_opts())
 
     # -- execution ---------------------------------------------------------
 
@@ -187,12 +236,28 @@ class PrivacyEngine:
                                     weight_decay=wd)
             return params, opt, loss, aux
 
-        return jax.jit(step)
+        if self.mesh is None:
+            return jax.jit(step)
+        # Explicit shardings: batch over the data axes, everything else —
+        # params, optimizer state, PRNG key, and every output — replicated.
+        # Per-example norms and the clipped sum reduce globally under SPMD
+        # (the clip coefficients see the psum'd global norm), and the
+        # noise is drawn from the one replicated key, so each device adds
+        # identical noise rather than independent per-shard draws.
+        from repro.launch.sharding import batch_sharding
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        repl = NamedSharding(self.mesh, P())
+        batch_sh = batch_sharding(self._batch_spec, self.mesh)
+        return jax.jit(step, in_shardings=(repl, repl, batch_sh, repl),
+                       out_shardings=repl)
 
     def private_step(self, params, opt, batch, key=None):
         """One fused DP-SGD step: gradient + clip + noise + optimizer
         update in a single jitted closure over the plan, plus host-side
-        accountant bookkeeping.  Returns (params, opt, loss, aux)."""
+        accountant bookkeeping.  With a mesh the closure is jitted with
+        explicit shardings (batch on the data axes; params, optimizer
+        state, key, and outputs replicated).  Returns (params, opt, loss,
+        aux)."""
         out = self._jit_step(params, opt, batch, self._check_key(key))
         if self.accountant is not None:
             self.accountant.step()

@@ -141,10 +141,9 @@ def ghost_norms_from_captures(params, caps, dtaps, metas, *,
     for name, meta in metas.items():
         by_param[meta.path].append(name)
 
-    B = None
-    for name in metas:
-        B = jax.tree.leaves(dtaps[name])[0].shape[metas[name].scanned]
-        break
+    # Segmented taps' leading axes are slots, not examples — the example
+    # count comes from their static metadata (same rule as _batch_size).
+    B = _batch_size(metas, dtaps)
     total = jnp.zeros((B,), jnp.float32)
 
     for path, names in by_param.items():
@@ -315,9 +314,11 @@ def planned_clipped_sum(apply_fn, params, batch, plan, *, l2_clip: float,
         missing = sorted(set(plan.layers) - set(metas))
         extra = sorted(set(metas) - set(plan.layers))
         raise ValueError(
-            f"ExecPlan does not match this model: plan-only layers "
-            f"{missing}, model-only layers {extra} — re-plan (stale or "
-            f"mismatched serialized plan?)")
+            f"ExecPlan {plan.fingerprint or '<unfingerprinted>'} "
+            f"(mesh {costmodel.format_mesh(tuple(plan.mesh))}) does not "
+            f"match this model: plan-only layers {missing}, model-only "
+            f"layers {extra} — re-plan (stale or mismatched serialized "
+            f"plan?)")
     B = _batch_size(metas, dtaps)
     total = jnp.zeros((B,), jnp.float32)
     stash: dict = {}

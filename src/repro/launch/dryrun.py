@@ -337,9 +337,28 @@ def cache_sharding(cfg, cache_sds, mesh, batch: int):
     return jax.tree.map(spec, cache_sds)
 
 
+def plan_collectives(model, params_sds, bspec, dpc, mesh) -> dict:
+    """Planner-predicted per-layer collective bytes for a train cell —
+    the analytic counterpart of the post-SPMD HLO collectives parsed from
+    the compiled module, from one shape-only probe."""
+    from repro.core import costmodel
+
+    plan = costmodel.get_plan(model.apply, params_sds, bspec,
+                              mesh=mesh, **dpc.planner_opts())
+    return {
+        "mesh": costmodel.format_mesh(tuple(plan.mesh)),
+        "fingerprint": plan.fingerprint,
+        "per_layer_bytes": {n: lp.coll_bytes
+                            for n, lp in plan.layers.items()},
+        "total_bytes": plan.total_coll_bytes,
+    }
+
+
 def build_cell(arch: str, shape_name: str, mesh, *, microbatches=None,
                overrides: dict | None = None, dp_overrides: dict | None = None):
-    """Returns (step_fn, example_args_with_shardings, donate) for a cell.
+    """Returns (step_fn, example_args_with_shardings, donate, info) for a
+    cell; ``info`` carries the planner's predicted per-layer collective
+    bytes for train cells.
 
     ``overrides``: ModelConfig fields (hillclimb knobs, e.g.
     prefill_last_only=True, moe_impl="einsum", remat=False).
@@ -401,7 +420,13 @@ def build_cell(arch: str, shape_name: str, mesh, *, microbatches=None,
             lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
             bspec, bshard)
         key_in = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=repl)
-        return train_step, (params_in, opt_in, batch_in, key_in), (0, 1)
+        try:
+            info = {"dp_plan": plan_collectives(model, params_sds, bspec,
+                                                dpc, mesh)}
+        except Exception as e:          # advisory: never fail the cell
+            info = {"dp_plan": {"error": f"{type(e).__name__}: {e}"}}
+        return train_step, (params_in, opt_in, batch_in, key_in), (0, 1), \
+            info
 
     if shape.kind == "prefill":
         specs = model.prefill_input_specs(shape)
@@ -417,14 +442,14 @@ def build_cell(arch: str, shape_name: str, mesh, *, microbatches=None,
                 return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
             return prefill_step, (params_in, args["src_frames"],
-                                  args["tokens"]), ()
+                                  args["tokens"]), (), {}
 
         def prefill_step(params, tokens):
             logits, cache = model.prefill(params, tokens,
                                           max_len=shape.seq_len)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
-        return prefill_step, (params_in, args["tokens"]), ()
+        return prefill_step, (params_in, args["tokens"]), (), {}
 
     # decode
     specs = model.decode_input_specs(shape)
@@ -442,7 +467,7 @@ def build_cell(arch: str, shape_name: str, mesh, *, microbatches=None,
         logits, cache = model.decode_step(params, cache, tokens)
         return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
-    return serve_step, (params_in, cache_in, tok_in), (1,)
+    return serve_step, (params_in, cache_in, tok_in), (1,), {}
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, *, save_hlo=None,
@@ -450,9 +475,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, save_hlo=None,
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     with shd.mesh_rules(mesh):
-        step, args, donate = build_cell(arch, shape_name, mesh,
-                                        overrides=overrides,
-                                        dp_overrides=dp_overrides)
+        step, args, donate, info = build_cell(arch, shape_name, mesh,
+                                              overrides=overrides,
+                                              dp_overrides=dp_overrides)
         lowered = jax.jit(step, donate_argnums=donate).lower(*args)
     t1 = time.time()
     compiled = lowered.compile()
@@ -483,6 +508,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, save_hlo=None,
         "collectives": coll,
         "hlo_chars": len(hlo),
     }
+    if info.get("dp_plan"):
+        rec["dp_plan_collectives"] = info["dp_plan"]
     return rec
 
 

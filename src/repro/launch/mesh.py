@@ -8,6 +8,7 @@ launchers treat as an extra pure-data axis.
 from __future__ import annotations
 
 import math
+import os
 
 import jax
 
@@ -32,3 +33,48 @@ def make_host_mesh(model_par: int = 1):
     data = n // model_par
     return jax.make_mesh((data, model_par), ("data", "model"),
                          devices=jax.devices()[: data * model_par])
+
+
+def force_host_device_count_for(argv):
+    """Pre-main hook for CLI entry points: when ``argv`` carries a
+    ``--mesh data:N`` spec and ``XLA_FLAGS`` is unset, force the host
+    platform to N devices.  Must run before jax initializes its backend
+    (merely having imported jax is fine — the device count locks at
+    first use)."""
+    if "XLA_FLAGS" in os.environ:
+        return
+    spec = None
+    for i, a in enumerate(argv):
+        if a.startswith("--mesh="):
+            spec = a.split("=", 1)[1]
+        elif a == "--mesh" and i + 1 < len(argv):
+            spec = argv[i + 1]
+    if not spec:
+        return
+    n = math.prod(int(p.split(":")[1]) for p in spec.split(",")
+                  if ":" in p)
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={n}"
+
+
+def make_mesh_from_spec(spec: str):
+    """Build a live ``jax.sharding.Mesh`` from a planner mesh spec like
+    ``"data:8"`` or ``"data:4,model:2"`` (see ``costmodel.mesh_axes``) over
+    this process's devices.  The device count must cover the mesh; on a
+    CPU host set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    before any jax import."""
+    from repro.core.costmodel import format_mesh, mesh_axes
+
+    axes = mesh_axes(spec)
+    if not axes:
+        return None
+    shape = tuple(s for _, s in axes)
+    names = tuple(n for n, _ in axes)
+    n = math.prod(shape)
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"mesh {format_mesh(axes)} needs {n} devices, have "
+            f"{len(jax.devices())} — on CPU hosts set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} before "
+            "any jax import")
+    return jax.make_mesh(shape, names, devices=jax.devices()[:n])

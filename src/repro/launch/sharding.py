@@ -122,8 +122,15 @@ def param_sharding(axes_tree, mesh: Mesh, *, fsdp: bool = False,
 
 
 def batch_sharding(batch_abstract, mesh: Mesh):
-    """Shard every batch leaf's leading axis over the data axes."""
-    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    """Shard every batch leaf's leading axis over the data axes (the same
+    axis-name vocabulary the planner's cost model uses)."""
+    from repro.core.costmodel import DATA_AXIS_NAMES
+
+    data_axes = tuple(a for a in DATA_AXIS_NAMES if a in mesh.axis_names)
+    if not data_axes:
+        raise ValueError(
+            f"mesh axes {mesh.axis_names} contain no data-parallel axis "
+            f"(one of {DATA_AXIS_NAMES}) to shard the batch over")
     spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
 
     def mk(leaf):

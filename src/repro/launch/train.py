@@ -4,16 +4,26 @@ Runs on whatever devices exist (CPU here, a pod in production — the same
 code path: the mesh is just bigger).  The loop is plan → step → account:
 one PrivacyEngine owns the ExecPlan, the jitted private step, and the
 accountant; checkpointing, the straggler monitor, and chaos-monkey fault
-injection wrap around it.
+injection wrap around it.  ``--mesh data:8`` plans mesh-aware (per-layer
+collective-bytes costs, topology-keyed fingerprint — the plan table gains
+a ``coll MB`` column) and runs the private step sharded over the data
+axes; on a CPU host the device count is forced to match before jax loads.
 
     PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
         --reduced --steps 50 --batch 8 --noise 0.8 --clip 1.0 \
-        --ckpt-dir /tmp/ckpt --fail-at 20
+        --ckpt-dir /tmp/ckpt --fail-at 20 --mesh data:8
 """
 from __future__ import annotations
 
 import argparse
 import os
+import sys
+
+if __name__ == "__main__":
+    # A --mesh data:N run on a CPU host needs N devices before the jax
+    # backend initializes.
+    from repro.launch.mesh import force_host_device_count_for
+    force_host_device_count_for(sys.argv)
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +84,11 @@ def main(argv=None):
                     type=lambda v: v if v == "auto" else int(v),
                     help="int, or 'auto' to derive from the plan's "
                          "peak-memory estimates")
+    ap.add_argument("--mesh", default=None,
+                    help="mesh spec, e.g. 'data:8': plan mesh-aware "
+                         "(collective-bytes costs, topology-keyed "
+                         "fingerprint) and run the step sharded over the "
+                         "data axes")
     ap.add_argument("--explain", action="store_true",
                     help="print the per-layer execution plan and exit")
     ap.add_argument("--plan-json", default=None,
@@ -115,12 +130,22 @@ def main(argv=None):
     # Plan once: the engine is the step.  Restarted segments re-enter here
     # with the plan cache warm, so only the first segment ever probes.
     # params0 doubles as every segment's (deterministic) starting point.
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_mesh_from_spec
+        mesh = make_mesh_from_spec(args.mesh)
+        d = costmodel.mesh_data_size(costmodel.mesh_axes(mesh))
+        if args.batch % d:
+            raise SystemExit(f"--batch {args.batch} not divisible by the "
+                             f"mesh's data-parallel degree {d}")
+        print(f"[mesh] {costmodel.format_mesh(costmodel.mesh_axes(mesh))} "
+              f"over {len(jax.devices())} devices")
     params0, _ = model.init(jax.random.PRNGKey(0))
     engine = PrivacyEngine(
         model.apply, params0, batch_fn(0), dp=dpc, optimizer="adamw",
         lr=lambda step: cosine_schedule(step, warmup=10, total=args.steps,
                                         peak=args.lr),
-        weight_decay=0.01, accountant=acct)
+        weight_decay=0.01, accountant=acct, mesh=mesh)
     # Fixed strategies bypass the planner; don't pay an advisory probe for
     # them unless the user asks.
     if args.explain or dpc.strategy == "auto":

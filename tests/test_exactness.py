@@ -1,0 +1,368 @@
+"""Differential-testing oracle suite.
+
+Every norm / contrib realization in :mod:`repro.core.kinds` — dense
+gram/stream/rank1, segmented dense (MoE slots), embed segsum/gram/pe,
+conv ghost/materialize (incl. stride + dilation + groups, fgc and bgc
+impls), scale — is checked against a naive autodiff oracle: the jacobian
+of the per-example loss vector (vmap-of-vjp semantics, valid even for
+segmented layers where examples do not own contiguous batch rows).  Runs
+across float32 and bfloat16.
+
+The deterministic geometry grid always runs; when ``hypothesis`` is
+available (CI installs requirements-dev.txt) randomized property tests
+widen the geometry coverage.  The sharded pipeline must pass the same
+oracle — see the ``multidevice``-marked test at the bottom, which the
+multi-device CI lane runs on a forced 8-device host.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import true_norms_sq
+from repro.core import clipped_grad_sum, ghost_norms
+from repro.core.strategies import clip_coefficients
+from repro.core.tapper import Tapper
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+    settings.register_profile("exactness", max_examples=15, deadline=None)
+    settings.load_profile("exactness")
+except ImportError:                       # container without dev extras:
+    HAVE_HYPOTHESIS = False               # the deterministic grid still runs
+
+DTYPES = (jnp.float32, jnp.bfloat16)
+
+
+def _tol(dtype):
+    """Comparison tolerance per capture dtype.  bf16 has ~8 mantissa bits:
+    inputs/cotangents are quantized before the f32-accumulated reductions,
+    so realizations legitimately differ at the ~1e-2 relative level."""
+    return (dict(rtol=3e-4, atol=1e-6) if dtype == jnp.float32
+            else dict(rtol=6e-2, atol=2e-3))
+
+
+def oracle_pe_grads(apply_fn, params, batch):
+    """Naive per-example gradients: rows of the Jacobian of the (B,)
+    per-example loss vector — one VJP per example, no layer algebra."""
+    return jax.jacrev(lambda p: apply_fn(p, batch, Tapper()))(params)
+
+
+def _assert_norms_match(apply_fn, params, batch, dtype, **norm_kw):
+    want = np.asarray(true_norms_sq(oracle_pe_grads(apply_fn, params, batch)))
+    _, got, _ = ghost_norms(apply_fn, params, batch, **norm_kw)
+    np.testing.assert_allclose(np.asarray(got), want, **_tol(dtype))
+
+
+def _sum_tol(dtype, scale):
+    """Clipped-sum tolerance: the norm error propagates into the clip
+    coefficients, so sums are a notch looser than the norms themselves."""
+    if dtype == jnp.float32:
+        return dict(rtol=3e-3, atol=3e-4 * scale)
+    return dict(rtol=1.2e-1, atol=2e-2 * scale)
+
+
+def _oracle_clipped_sum(apply_fn, params, batch, C):
+    pe = oracle_pe_grads(apply_fn, params, batch)
+    coef = clip_coefficients(true_norms_sq(pe), C)
+    return jax.tree.map(
+        lambda g: jnp.einsum("b...,b->...", g.astype(jnp.float32), coef), pe)
+
+
+def _assert_clipped_sum_matches(apply_fn, params, batch, dtype, C=0.1,
+                                **kw):
+    want = _oracle_clipped_sum(apply_fn, params, batch, C)
+    _, got, _ = clipped_grad_sum(apply_fn, params, batch, l2_clip=C,
+                                 check=True, **kw)
+    scale = max(max(float(jnp.abs(w).max())
+                    for w in jax.tree.leaves(want)), 1.0)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(
+            np.asarray(g, np.float32), np.asarray(w, np.float32),
+            **_sum_tol(dtype, scale))
+
+
+# ---------------------------------------------------------------------------
+# Single-kind model builders
+
+
+def dense_seq_model(dtype, B=3, T=6, Di=5, Do=4, seed=0):
+    rng = np.random.RandomState(seed)
+    params = {"fc": {"w": jnp.asarray(rng.randn(Di, Do), dtype) * 0.5,
+                     "b": jnp.asarray(rng.randn(Do), dtype) * 0.1}}
+
+    def apply_fn(p, batch, tp):
+        y = tp.dense("fc", batch["x"], p["fc"]["w"], p["fc"]["b"])
+        return jnp.sum(jnp.tanh(y.astype(jnp.float32)) ** 2, axis=(1, 2))
+
+    batch = {"x": jnp.asarray(rng.randn(B, T, Di), dtype)}
+    return apply_fn, params, batch
+
+
+def dense_novec_model(dtype, B=4, Di=6, Do=5, seed=1):
+    rng = np.random.RandomState(seed)
+    params = {"fc": {"w": jnp.asarray(rng.randn(Di, Do), dtype) * 0.5}}
+
+    def apply_fn(p, batch, tp):
+        y = tp.dense("fc", batch["x"], p["fc"]["w"])
+        return jnp.sum(y.astype(jnp.float32) ** 2, axis=1)
+
+    batch = {"x": jnp.asarray(rng.randn(B, Di), dtype)}
+    return apply_fn, params, batch
+
+
+def seg_dense_model(dtype, B=4, E=3, S=5, Di=4, Do=3, seed=2):
+    """MoE-style dispatched slots: (E, S) slots with explicit example ids;
+    an example's loss is the sum over its slots across all experts."""
+    rng = np.random.RandomState(seed)
+    params = {"ex": {"w": jnp.asarray(rng.randn(E, Di, Do), dtype) * 0.5}}
+    seg = jnp.asarray(rng.randint(0, B, (E, S)))
+
+    def apply_fn(p, batch, tp):
+        y = tp.dense_segmented("ex", batch["x"], p["ex"]["w"], batch["seg"],
+                               n_examples=B)
+        v = jnp.sum(jnp.tanh(y.astype(jnp.float32)) ** 2, axis=-1)  # (E, S)
+        return jnp.zeros((B,), jnp.float32).at[
+            batch["seg"].reshape(-1)].add(v.reshape(-1))
+
+    batch = {"x": jnp.asarray(rng.randn(E, S, Di), dtype), "seg": seg}
+    return apply_fn, params, batch
+
+
+def embed_model(dtype, B=3, T=7, V=13, D=4, seed=3):
+    rng = np.random.RandomState(seed)
+    params = {"emb": {"emb": jnp.asarray(rng.randn(V, D), dtype) * 0.5}}
+
+    def apply_fn(p, batch, tp):
+        e = tp.embed("emb", p["emb"]["emb"], batch["ids"])
+        return jnp.sum(jnp.tanh(e.astype(jnp.float32)) ** 2, axis=(1, 2))
+
+    # repeated ids per example exercise the same-token cross terms
+    batch = {"ids": jnp.asarray(rng.randint(0, V, (B, T)))}
+    return apply_fn, params, batch
+
+
+CONV_GEOMS = [
+    # (C, D, HW, K, stride, padding, dilation, groups)
+    (3, 4, 8, 3, 1, 1, 1, 1),     # vanilla
+    (4, 6, 9, 3, 2, 1, 1, 1),     # strided
+    (4, 6, 9, 3, 1, 2, 2, 1),     # dilated
+    (4, 8, 8, 3, 1, 1, 1, 4),     # grouped
+    (6, 6, 9, 3, 2, 2, 2, 2),     # strided + dilated + grouped
+]
+
+
+def conv_model(dtype, geom, B=3, seed=4):
+    C, D, HW, K, s, p_, dil, g = geom
+    rng = np.random.RandomState(seed)
+    params = {"c": {"w": jnp.asarray(rng.randn(D, C // g, K, K), dtype) * 0.3,
+                    "b": jnp.asarray(rng.randn(D), dtype) * 0.1}}
+
+    def apply_fn(p, batch, tp):
+        y = tp.conv("c", batch["x"], p["c"]["w"], p["c"]["b"], stride=s,
+                    padding=p_, dilation=dil, groups=g)
+        return jnp.sum(jnp.tanh(y.astype(jnp.float32)) ** 2,
+                       axis=tuple(range(1, y.ndim)))
+
+    batch = {"x": jnp.asarray(rng.randn(B, C, HW, HW), dtype)}
+    return apply_fn, params, batch
+
+
+def scale_model(dtype, B=4, T=5, D=6, seed=5):
+    rng = np.random.RandomState(seed)
+    params = {"s": {"g": jnp.asarray(1 + 0.3 * rng.randn(D), dtype),
+                    "b": jnp.asarray(rng.randn(D), dtype) * 0.1}}
+
+    def apply_fn(p, batch, tp):
+        y = tp.scale("s", batch["x"], p["s"]["g"], p["s"]["b"])
+        return jnp.sum(jnp.tanh(y.astype(jnp.float32)) ** 2, axis=(1, 2))
+
+    batch = {"x": jnp.asarray(rng.randn(B, T, D), dtype)}
+    return apply_fn, params, batch
+
+
+# ---------------------------------------------------------------------------
+# Dense: gram / stream / rank1
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("method", ("gram", "stream", "auto"))
+def test_dense_norms_match_oracle(method, dtype):
+    apply_fn, params, batch = dense_seq_model(dtype)
+    _assert_norms_match(apply_fn, params, batch, dtype, norm_method=method)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_dense_rank1_norms_match_oracle(dtype):
+    apply_fn, params, batch = dense_novec_model(dtype)
+    _assert_norms_match(apply_fn, params, batch, dtype, norm_method="rank1")
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("strategy", ("bk", "auto"))
+def test_dense_clipped_sum_matches_oracle(strategy, dtype):
+    apply_fn, params, batch = dense_seq_model(dtype)
+    _assert_clipped_sum_matches(apply_fn, params, batch, dtype,
+                                strategy=strategy)
+
+
+# ---------------------------------------------------------------------------
+# Segmented dense (MoE expert slots)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("method", ("gram", "stream"))
+def test_seg_dense_norms_match_oracle(method, dtype):
+    apply_fn, params, batch = seg_dense_model(dtype)
+    _assert_norms_match(apply_fn, params, batch, dtype, norm_method=method)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_seg_dense_clipped_sum_matches_oracle(dtype):
+    apply_fn, params, batch = seg_dense_model(dtype)
+    _assert_clipped_sum_matches(apply_fn, params, batch, dtype,
+                                strategy="bk")
+
+
+# ---------------------------------------------------------------------------
+# Embedding: segsum / gram / pe
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("method", ("segsum", "gram", "pe"))
+def test_embed_norms_match_oracle(method, dtype):
+    apply_fn, params, batch = embed_model(dtype)
+    _assert_norms_match(apply_fn, params, batch, dtype, embed_method=method)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_embed_clipped_sum_matches_oracle(dtype):
+    apply_fn, params, batch = embed_model(dtype)
+    _assert_clipped_sum_matches(apply_fn, params, batch, dtype,
+                                strategy="bk")
+
+
+# ---------------------------------------------------------------------------
+# Conv: ghost (im2col Gram) vs materialize, across geometry and impls
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("method", ("ghost", "pe"))
+@pytest.mark.parametrize("geom", CONV_GEOMS,
+                         ids=[f"C{c}D{d}s{s}d{dl}g{g}"
+                              for c, d, _, _, s, _, dl, g in CONV_GEOMS])
+def test_conv_norms_match_oracle(geom, method, dtype):
+    apply_fn, params, batch = conv_model(dtype, geom)
+    _assert_norms_match(apply_fn, params, batch, dtype, conv_norm=method)
+
+
+@pytest.mark.parametrize("impl", ("fgc", "bgc"))
+@pytest.mark.parametrize("geom", (CONV_GEOMS[1], CONV_GEOMS[4]),
+                         ids=("strided", "mixed"))
+def test_conv_pe_grad_impls_match_oracle(geom, impl):
+    apply_fn, params, batch = conv_model(jnp.float32, geom)
+    want = oracle_pe_grads(apply_fn, params, batch)
+    from repro.core.strategies import crb_per_example_grads
+    _, got = crb_per_example_grads(apply_fn, params, batch, conv_impl=impl)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=3e-4, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_conv_clipped_sum_matches_oracle(dtype):
+    apply_fn, params, batch = conv_model(dtype, CONV_GEOMS[4])
+    _assert_clipped_sum_matches(apply_fn, params, batch, dtype,
+                                strategy="auto")
+
+
+# ---------------------------------------------------------------------------
+# Scale (elementwise affine)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_scale_norms_match_oracle(dtype):
+    apply_fn, params, batch = scale_model(dtype)
+    _assert_norms_match(apply_fn, params, batch, dtype)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_scale_clipped_sum_matches_oracle(dtype):
+    apply_fn, params, batch = scale_model(dtype)
+    _assert_clipped_sum_matches(apply_fn, params, batch, dtype,
+                                strategy="bk")
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-driven geometry sweeps (CI installs requirements-dev.txt)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(2, 12), st.integers(2, 8), st.integers(2, 8),
+           st.integers(0, 99), st.sampled_from(["gram", "stream"]))
+    def test_dense_norm_property(T, Di, Do, seed, method):
+        apply_fn, params, batch = dense_seq_model(
+            jnp.float32, B=3, T=T, Di=Di, Do=Do, seed=seed)
+        _assert_norms_match(apply_fn, params, batch, jnp.float32,
+                            norm_method=method)
+
+    @given(st.integers(1, 2), st.integers(1, 2), st.integers(0, 2),
+           st.sampled_from([1, 2]), st.integers(0, 99))
+    def test_conv_ghost_norm_property(stride, dilation, padding, groups,
+                                      seed):
+        C = 4 * groups
+        D = 2 * groups
+        geom = (C, D, 8, 3, stride, padding, dilation, groups)
+        apply_fn, params, batch = conv_model(jnp.float32, geom, seed=seed)
+        _assert_norms_match(apply_fn, params, batch, jnp.float32,
+                            conv_norm="ghost")
+
+    @given(st.integers(2, 10), st.integers(2, 6), st.integers(5, 16),
+           st.integers(0, 99), st.sampled_from(["segsum", "gram", "pe"]))
+    def test_embed_norm_property(T, D, V, seed, method):
+        apply_fn, params, batch = embed_model(jnp.float32, B=3, T=T, V=V,
+                                              D=D, seed=seed)
+        _assert_norms_match(apply_fn, params, batch, jnp.float32,
+                            embed_method=method)
+
+
+# ---------------------------------------------------------------------------
+# The sharded pipeline passes the same oracle (8-device CI lane)
+
+
+def _grad_extracting_optimizer(grads, state, params, *, lr, weight_decay):
+    """Identity 'optimizer' that surfaces the pipeline's gradient as the
+    new params, so the sharded jitted step's output IS the gradient."""
+    return grads, state
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8")
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_sharded_engine_passes_oracle(dtype):
+    """The mesh-planned, explicitly sharded private step must reproduce
+    the naive oracle's clipped mean gradient — same exactness bar as the
+    single-device realizations above."""
+    from repro.core import DPConfig, PrivacyEngine
+
+    apply_fn, params, batch = conv_model(dtype, CONV_GEOMS[1], B=8, seed=7)
+    mesh = jax.make_mesh((8,), ("data",))
+    C = 0.1
+    engine = PrivacyEngine(apply_fn, params, batch, dp=DPConfig(l2_clip=C),
+                           optimizer=_grad_extracting_optimizer, mesh=mesh)
+    got_grad, _, _, _ = engine.private_step(params, {"step": jnp.zeros(())},
+                                            batch)
+    B = batch["x"].shape[0]
+    want = _oracle_clipped_sum(apply_fn, params, batch, C)
+    want_grad = jax.tree.map(lambda g: g / B, want)
+    scale = max(max(float(jnp.abs(w).max())
+                    for w in jax.tree.leaves(want_grad)), 1e-3)
+    for g, w in zip(jax.tree.leaves(got_grad), jax.tree.leaves(want_grad)):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   **_sum_tol(dtype, scale))

@@ -1,0 +1,310 @@
+"""Sharding-aware DP execution.
+
+Two groups of tests:
+
+* Mesh-aware *planning* (no devices needed — a mesh spec plans for a
+  topology this host doesn't have): collective-bytes cost terms flip
+  per-layer decisions, the mesh is folded into fingerprints and cache
+  keys, and stale plans fail loudly with the offending field named.
+* ``multidevice``-marked *execution* equivalence: on a forced 8-device
+  host (``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — the CI
+  multi-device lane), the sharded ``private_step`` must equal the
+  single-device engine on the same batch, including the noise (one
+  replicated draw, not per-shard).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import tree_maxdiff
+from repro.core import DPConfig, ExecPlan, PrivacyEngine, costmodel
+from repro.optim import adamw_init
+
+needs_8_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _batch8(batch):
+    return jax.tree.map(lambda a: jnp.concatenate([a, a], axis=0), batch)
+
+
+# ---------------------------------------------------------------------------
+# Mesh normalization + planning (device-free)
+
+
+def test_mesh_axes_normalization():
+    assert costmodel.mesh_axes(None) == ()
+    assert costmodel.mesh_axes("data:8") == (("data", 8),)
+    assert costmodel.mesh_axes("data:4, model:2") == (("data", 4),
+                                                      ("model", 2))
+    assert costmodel.mesh_axes({"data": 8}) == (("data", 8),)
+    assert costmodel.mesh_axes((("pod", 2), ("data", 4))) == (("pod", 2),
+                                                              ("data", 4))
+    with pytest.raises(ValueError, match="bad mesh spec"):
+        costmodel.mesh_axes("data=8")
+    assert costmodel.mesh_data_size((("data", 8), ("model", 2))) == 8
+    assert costmodel.mesh_data_size((("pod", 2), ("data", 4))) == 8
+
+
+def test_mesh_flips_planner_decisions(toy_model):
+    """The collective-bytes terms must actually change the plan: a stash
+    whose per-example grads would cross the ring loses its free sum."""
+    apply_fn, params, batch = toy_model
+    p0 = costmodel.get_plan(apply_fn, params, batch)
+    p8 = costmodel.get_plan(apply_fn, params, batch, mesh="data:8")
+    d0 = {n: (lp.norm_method, p0.sum_methods()[n])
+          for n, lp in p0.layers.items()}
+    d8 = {n: (lp.norm_method, p8.sum_methods()[n])
+          for n, lp in p8.layers.items()}
+    assert d0 != d8, "mesh-aware costs changed no per-layer decision"
+    assert p8.total_coll_bytes > 0
+    assert p0.total_coll_bytes == 0
+    assert p8.mesh == (("data", 8),)
+
+
+def test_mesh_explain_has_collective_column(toy_model):
+    apply_fn, params, batch = toy_model
+    engine = PrivacyEngine(apply_fn, params, batch, mesh="data:8")
+    text = engine.explain()
+    assert "coll MB" in text
+    assert "mesh=data=8" in text
+    assert "mesh: data=8" in text
+    # and the per-layer column is populated (grad sync is never free)
+    plan = engine.plan()
+    assert all(lp.coll_bytes > 0 for lp in plan.layers.values()
+               if lp.param_bytes > 0)
+
+
+def test_mesh_in_fingerprint_and_cache_key(toy_model):
+    apply_fn, params, batch = toy_model
+    fp0 = costmodel.plan_fingerprint(apply_fn, params, batch)
+    fp8 = costmodel.plan_fingerprint(apply_fn, params, batch, mesh="data:8")
+    fp8b = costmodel.plan_fingerprint(apply_fn, params, batch,
+                                      mesh={"data": 8})
+    assert fp0 != fp8
+    assert fp8 == fp8b          # spec string and axes dict key identically
+    p0 = costmodel.get_plan(apply_fn, params, batch)
+    p8 = costmodel.get_plan(apply_fn, params, batch, mesh="data:8")
+    assert p0.fingerprint == fp0 and p8.fingerprint == fp8
+
+
+def test_mesh_survives_json_roundtrip(toy_model):
+    apply_fn, params, batch = toy_model
+    plan = costmodel.get_plan(apply_fn, params, batch, mesh="data:8")
+    restored = ExecPlan.from_json(plan.to_json())
+    assert restored == plan
+    assert tuple(restored.mesh) == (("data", 8),)
+    assert restored.batch_sig == plan.batch_sig
+    assert restored.total_coll_bytes == plan.total_coll_bytes
+
+
+# ---------------------------------------------------------------------------
+# Stale-plan validation names the offending field
+
+
+def test_stale_plan_mesh_mismatch_named(toy_model):
+    apply_fn, params, batch = toy_model
+    plan = costmodel.get_plan(apply_fn, params, batch, mesh="data:8")
+    restored = ExecPlan.from_json(plan.to_json())
+    with pytest.raises(ValueError,
+                       match=r"mesh shape mismatch.*data=8.*data=4"):
+        costmodel.check_plan_matches(restored, mesh="data:4")
+    with pytest.raises(ValueError,
+                       match=r"mesh shape mismatch.*data=8.*\(no mesh\)"):
+        costmodel.check_plan_matches(restored, mesh=())
+
+
+def test_stale_plan_batch_mismatch_named(toy_model):
+    apply_fn, params, batch = toy_model
+    plan = costmodel.get_plan(apply_fn, params, batch)
+    bigger = _batch8(batch)
+    with pytest.raises(ValueError, match=r"batch shape mismatch.*4, 3, 12"):
+        costmodel.check_plan_matches(
+            plan, batch_sig=costmodel._shape_sig(bigger))
+
+
+def test_stale_plan_fingerprint_mismatch_named(toy_model):
+    apply_fn, params, batch = toy_model
+    plan = costmodel.get_plan(apply_fn, params, batch)
+    with pytest.raises(ValueError,
+                       match=rf"fingerprint mismatch.*{plan.fingerprint}"):
+        costmodel.check_plan_matches(plan, fingerprint="deadbeefdeadbeef")
+
+
+def test_engine_rejects_mesh_mismatched_plan_up_front(toy_model):
+    """Injecting a deserialized plan built for another topology fails at
+    engine construction, before any execution."""
+    apply_fn, params, batch = toy_model
+    plan = costmodel.get_plan(apply_fn, params, batch, mesh="data:8")
+    restored = ExecPlan.from_json(plan.to_json())
+    with pytest.raises(ValueError, match="mesh shape mismatch"):
+        PrivacyEngine(apply_fn, params, batch, plan=restored)
+
+
+def test_plan_store_cross_topology_load_fails_loudly(toy_model, tmp_path):
+    """A plan store written on one topology, loaded on another: the
+    planner refuses to silently re-plan over the stale layout."""
+    apply_fn, params, batch = toy_model
+    plan = costmodel.get_plan(apply_fn, params, batch, mesh="data:8")
+    path = str(tmp_path / "plans.json")
+    costmodel.save_plan_store(path, [plan])
+    costmodel.clear_plan_cache()
+    costmodel.clear_plan_store()
+    try:
+        costmodel.load_plan_store(path)
+        with pytest.raises(ValueError, match="mesh shape mismatch"):
+            costmodel.get_plan(apply_fn, params, batch, mesh="data:4")
+    finally:
+        costmodel.clear_plan_store()
+        costmodel.clear_plan_cache()
+
+
+def test_plan_store_ignores_unrelated_model_with_same_batch(toy_model,
+                                                            tmp_path):
+    """The cross-topology guard must key on *this* model's fingerprint:
+    a stored plan for a different model (or knobs) that merely shares the
+    batch shape must not block planning."""
+    apply_fn, params, batch = toy_model
+    # same model+batch but different planner knobs -> different fingerprint
+    other = costmodel.get_plan(apply_fn, params, batch, mesh="data:8",
+                               norm_method="gram")
+    path = str(tmp_path / "plans.json")
+    costmodel.save_plan_store(path, [other])
+    costmodel.clear_plan_cache()
+    costmodel.clear_plan_store()
+    try:
+        costmodel.load_plan_store(path)
+        plan = costmodel.get_plan(apply_fn, params, batch)   # must not raise
+        assert plan.mesh == ()
+    finally:
+        costmodel.clear_plan_store()
+        costmodel.clear_plan_cache()
+
+
+def test_shared_param_sync_charged_once():
+    """Taps sharing one parameter (tied embedding + LM head) sync one
+    gradient, not one each: the group's grad-sync bytes are split across
+    members instead of double-counted."""
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+
+    cfg = get_config("llama3.2-1b").reduced()
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda k: model.init(k)[0],
+                            jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.zeros((8, 16), jnp.int32),
+             "labels": jnp.zeros((8, 16), jnp.int32)}
+    plan = costmodel.get_plan(model.apply, params, batch, mesh="data:8")
+    tied = [g for g in plan.groups if len(g.members) > 1]
+    assert tied, "reduced llama must have a tied embed/head group"
+    g = tied[0]
+    ring = 2.0 * 7 / 8
+    pb = max(plan.layers[n].param_bytes for n in g.members)
+    norm_parts = sum(
+        (plan.layers[n].stash_bytes if plan.layers[n].stash
+         else plan.layers[n].ex_per_dev * 8 * 4) * ring
+        for n in g.members)
+    got = sum(plan.layers[n].coll_bytes for n in g.members)
+    assert got == pytest.approx(norm_parts + pb * ring)   # ONE table sync
+
+
+def test_batch_sharding_requires_a_data_axis():
+    """The executor and the cost model agree on the data-axis vocabulary;
+    a model-parallel-only mesh is rejected up front, not with an obscure
+    IndexError inside jit setup."""
+    from repro.launch.sharding import batch_sharding
+    mesh = jax.make_mesh((1,), ("model",))
+    with pytest.raises(ValueError, match="no data-parallel axis"):
+        batch_sharding({"x": jnp.zeros((4, 2))}, mesh)
+    # a 'batch'-named axis counts as data parallelism, like the planner
+    mesh_b = jax.make_mesh((1,), ("batch",))
+    sh = batch_sharding({"x": jnp.zeros((4, 2))}, mesh_b)
+    assert jax.tree.leaves(sh)[0].spec == jax.sharding.PartitionSpec("batch")
+
+
+# ---------------------------------------------------------------------------
+# Sharded execution equivalence (the multi-device CI lane)
+
+
+@pytest.mark.multidevice
+@needs_8_devices
+def test_sharded_private_step_matches_single_device(toy_model):
+    apply_fn, params, batch4 = toy_model
+    batch = _batch8(batch4)
+    mesh = jax.make_mesh((8,), ("data",))
+    dp = DPConfig(l2_clip=0.1)
+    e1 = PrivacyEngine(apply_fn, params, batch, dp=dp, lr=1e-2)
+    e8 = PrivacyEngine(apply_fn, params, batch, dp=dp, lr=1e-2, mesh=mesh)
+    p1, o1 = params, adamw_init(params)
+    p8, o8 = params, adamw_init(params)
+    for step in range(2):
+        p1, o1, l1, _ = e1.private_step(p1, o1, batch)
+        p8, o8, l8, _ = e8.private_step(p8, o8, batch)
+        assert abs(float(l1) - float(l8)) < 1e-5
+    assert tree_maxdiff(p1, p8) < 1e-6
+
+
+@pytest.mark.multidevice
+@needs_8_devices
+def test_sharded_noise_is_replicated_not_per_shard(toy_model):
+    """With a noise multiplier, the sharded step must add the *same* draw
+    on every device (one replicated key), so it still equals the
+    single-device noisy step bit-for-bit up to reduction order."""
+    apply_fn, params, batch4 = toy_model
+    batch = _batch8(batch4)
+    mesh = jax.make_mesh((8,), ("data",))
+    dp = DPConfig(l2_clip=0.1, noise_multiplier=1.3)
+    key = jax.random.key_data(jax.random.PRNGKey(7))
+    e1 = PrivacyEngine(apply_fn, params, batch, dp=dp, lr=1e-2)
+    e8 = PrivacyEngine(apply_fn, params, batch, dp=dp, lr=1e-2, mesh=mesh)
+    p1, _, _, _ = e1.private_step(params, adamw_init(params), batch, key)
+    p8, _, _, _ = e8.private_step(params, adamw_init(params), batch, key)
+    assert tree_maxdiff(p1, p8) < 1e-6
+
+
+@pytest.mark.multidevice
+@needs_8_devices
+def test_engine_rejects_indivisible_batch_up_front(toy_model):
+    """A live mesh whose data degree does not divide the batch fails at
+    engine construction with a named error, not inside XLA."""
+    apply_fn, params, batch4 = toy_model   # B=4 on an 8-way data mesh
+    mesh = jax.make_mesh((8,), ("data",))
+    with pytest.raises(ValueError, match="not divisible.*degree 8"):
+        PrivacyEngine(apply_fn, params, batch4,
+                      dp=DPConfig(l2_clip=0.1), mesh=mesh)
+
+
+@pytest.mark.multidevice
+@needs_8_devices
+def test_sharded_step_places_batch_on_data_axis(toy_model):
+    apply_fn, params, batch4 = toy_model
+    batch = _batch8(batch4)
+    mesh = jax.make_mesh((8,), ("data",))
+    engine = PrivacyEngine(apply_fn, params, batch,
+                           dp=DPConfig(l2_clip=0.1), mesh=mesh)
+    p, _, _, _ = engine.private_step(params, adamw_init(params), batch)
+    # outputs are replicated; the jitted step carries explicit shardings
+    for leaf in jax.tree.leaves(p):
+        assert leaf.sharding.is_fully_replicated
+    # the plan the engine executed is the mesh-keyed one
+    assert tuple(engine.plan().mesh) == (("data", 8),)
+
+
+@pytest.mark.multidevice
+@needs_8_devices
+def test_live_mesh_and_spec_plan_identically(toy_model):
+    """A live Mesh and its spec string produce the same fingerprint, so
+    plans serialized on a devices-attached host load on a planning-only
+    host and vice versa."""
+    apply_fn, params, batch4 = toy_model
+    batch = _batch8(batch4)
+    mesh = jax.make_mesh((8,), ("data",))
+    fp_live = costmodel.plan_fingerprint(apply_fn, params, batch, mesh=mesh)
+    fp_spec = costmodel.plan_fingerprint(apply_fn, params, batch,
+                                         mesh="data:8")
+    assert fp_live == fp_spec
