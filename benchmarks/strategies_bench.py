@@ -34,7 +34,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.configs import get_config
-from repro.core import DPConfig, PrivacyEngine
+from repro.core import ClipPolicy, DPConfig, PrivacyEngine
 from repro.core.clipping import dp_gradient
 from repro.models.registry import build_model
 
@@ -117,6 +117,72 @@ def run(out_path: str = "BENCH_strategies.json") -> dict:
     return results
 
 
+CLIP_CONFIGS = ("alexnet", "vgg16")
+
+
+def run_clip_modes(out_path: str = "BENCH_strategies.json") -> dict:
+    """Clipping-mode benchmark on the conv-heavy configs: the planned
+    engine under flat vs per_layer vs stale clipping, steady state (the
+    stale engine is stepped once outside the timer to leave bootstrap).
+    Entries merge into the strategy benchmark's JSON under
+    ``{config}@clip:{mode}`` keys; stale's fused single-pass plan should
+    be no slower than flat — that is the mode's whole point."""
+    results = {}
+    if os.path.exists(out_path):
+        results = json.load(open(out_path))
+    for name in CLIP_CONFIGS:
+        model, params, batch = _setup(name, SETTINGS[name])
+        opt0 = {"step": jnp.zeros(())}
+
+        def ident_opt(grads, state, params, *, lr, weight_decay):
+            return params, state
+
+        engines = {
+            "flat": PrivacyEngine(
+                model.apply, params, batch, optimizer=ident_opt,
+                dp=DPConfig(l2_clip=1.0, clipping="flat")),
+            "per_layer": PrivacyEngine(
+                model.apply, params, batch, optimizer=ident_opt,
+                dp=DPConfig(l2_clip=1.0, clipping="per_layer")),
+            "stale": PrivacyEngine(
+                model.apply, params, batch, optimizer=ident_opt,
+                dp=DPConfig(l2_clip=1.0, clipping="stale")),
+        }
+        # Steady state: step each engine once so the stale engine leaves
+        # bootstrap (and every jit is compiled) before the timers run.
+        for eng in engines.values():
+            eng.private_step(params, opt0, batch)
+        # The modes differ by a few percent at most, so the interleaved
+        # min needs more samples than the strategy sweep to beat host
+        # noise on a shared machine.
+        times = {k: float("inf") for k in engines}
+        for rep in range(5):
+            for mode, eng in engines.items():
+                t = time_fn(lambda p, b, _e=eng: _e.private_step(
+                                p, opt0, b)[2],
+                            params, batch, warmup=1 if rep == 0 else 0,
+                            iters=8, reduce="min")
+                times[mode] = min(times[mode], t)
+        fused = sum(lp.fused
+                    for lp in engines["stale"].plan().layers.values())
+        for mode, t in times.items():
+            key = f"{name}@clip:{mode}"
+            results[key] = {
+                "times_us": t,
+                "vs_flat": t / times["flat"],
+                "fused_layers": fused if mode == "stale" else 0,
+            }
+            emit(f"strategies/{key}", t,
+                 f"ratio={t / times['flat']:.3f}")
+        if times["stale"] > times["flat"]:
+            print(f"WARNING: stale slower than flat on {name} "
+                  f"(ratio {times['stale'] / times['flat']:.3f})",
+                  flush=True)
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
 MESH_CONFIGS = ("alexnet", "llama32_1b")
 
 
@@ -185,7 +251,7 @@ def run_mesh(spec: str, out_path: str = "BENCH_strategies.json") -> dict:
 
 if __name__ == "__main__":
     argv = sys.argv[1:]
-    spec, rest, i = None, [], 0
+    spec, clip_modes, rest, i = None, False, [], 0
     while i < len(argv):
         a = argv[i]
         if a == "--mesh":
@@ -195,11 +261,15 @@ if __name__ == "__main__":
             spec, i = argv[i + 1], i + 2
         elif a.startswith("--mesh="):
             spec, i = a.split("=", 1)[1], i + 1
+        elif a == "--clip-modes":
+            clip_modes, i = True, i + 1
         else:
             rest.append(a)
             i += 1
     out = rest[0] if rest else "BENCH_strategies.json"
     if spec:
         run_mesh(spec, out)
+    elif clip_modes:
+        run_clip_modes(out)
     else:
         run(out)

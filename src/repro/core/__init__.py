@@ -3,26 +3,33 @@
 extensions) and the DP-SGD machinery built on it.  The plan-first
 :class:`PrivacyEngine` is the public entry point; the strategy-level
 functions remain as its functional core and compatibility surface."""
-from repro.core.clipping import (DPConfig, NormCfg, add_noise, dp_gradient,
-                                 non_dp_gradient, resolve_microbatches)
+from repro.core.clipping import (ClipPolicy, DPConfig, NormCfg, add_noise,
+                                 dp_gradient, non_dp_gradient,
+                                 resolve_budgets, resolve_microbatches)
 from repro.core.costmodel import (ExecPlan, check_plan_matches, mesh_axes,
                                   plan_fingerprint)
 from repro.core.engine import PrivacyEngine
-from repro.core.privacy import PrivacyAccountant, rdp_subsampled_gaussian
+from repro.core.privacy import (PrivacyAccountant, clipping_sensitivity,
+                                rdp_subsampled_gaussian)
 from repro.core.strategies import (STRATEGIES, check_coverage,
                                    clip_coefficients, clipped_grad_sum,
+                                   clipped_grad_sum_detailed,
                                    crb_per_example_grads, ghost_norms,
                                    multi_per_example_grads,
-                                   naive_per_example_grads, per_example_grads)
+                                   naive_per_example_grads,
+                                   per_example_grads,
+                                   per_layer_clip_coefficients)
 from repro.core.tapper import (LayerMeta, Tapper, capture_backward, probe,
                                scan_with_taps)
 
 __all__ = [
-    "DPConfig", "NormCfg", "ExecPlan", "PrivacyEngine", "add_noise",
-    "dp_gradient", "non_dp_gradient", "resolve_microbatches",
-    "PrivacyAccountant", "rdp_subsampled_gaussian", "STRATEGIES",
-    "check_coverage", "clip_coefficients", "clipped_grad_sum",
+    "ClipPolicy", "DPConfig", "NormCfg", "ExecPlan", "PrivacyEngine",
+    "add_noise", "dp_gradient", "non_dp_gradient", "resolve_budgets",
+    "resolve_microbatches", "PrivacyAccountant", "clipping_sensitivity",
+    "rdp_subsampled_gaussian", "STRATEGIES", "check_coverage",
+    "clip_coefficients", "clipped_grad_sum", "clipped_grad_sum_detailed",
     "crb_per_example_grads", "ghost_norms", "multi_per_example_grads",
-    "naive_per_example_grads", "per_example_grads", "LayerMeta", "Tapper",
+    "naive_per_example_grads", "per_example_grads",
+    "per_layer_clip_coefficients", "LayerMeta", "Tapper",
     "capture_backward", "probe", "scan_with_taps",
 ]

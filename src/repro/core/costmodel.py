@@ -85,6 +85,12 @@ BACKWARD_FIXED_FACTOR = 2.0
 # v5e: ~197 TFLOP/s bf16 against ~400 GB/s aggregate ICI per chip ≈ 500
 # FLOPs per byte on the wire; DCN-attached data parallelism is far worse.
 COLLECTIVE_FLOPS_PER_BYTE = 512.0
+# HBM cost of one byte, in FLOP-equivalents (TPU v5e: ~197 TFLOP/s bf16
+# against ~819 GB/s HBM ≈ 240; kept conservative).  Used to credit the
+# fused norm+contrib realizations available under stale-coefficient
+# clipping: the Gram tiles and the contribution accumulator share one
+# HBM read of the captures instead of two passes reading them twice.
+HBM_FLOPS_PER_BYTE = 128.0
 # Mesh axes treated as pure data parallelism (batch-sharded); every other
 # axis is model parallelism.
 DATA_AXIS_NAMES = ("pod", "data", "batch")
@@ -238,6 +244,7 @@ class LayerPlan:
     param_bytes: float = 0.0  # parameter bytes (grad-sync unit)
     coll_bytes: float = 0.0   # predicted collective bytes per step
     ex_per_dev: float = 0.0   # examples on one device's batch shard
+    fused: bool = False       # stale mode: single-pass gram_norm_fused
 
 
 @dataclasses.dataclass(frozen=True)
@@ -250,7 +257,7 @@ class GroupPlan:
     sum_method: str                # stash | contrib | backward
 
 
-PLAN_FORMAT_VERSION = 2   # v2: mesh axes, batch signature, collective bytes
+PLAN_FORMAT_VERSION = 3   # v3: clipping mode + per-layer fused flags
 
 _META_FIELDS = ("kind", "path", "param_key", "bias_key", "w_transposed",
                 "segmented", "scanned", "shared", "static")
@@ -305,6 +312,7 @@ class ExecPlan:
     mesh: tuple = ()               # (("data", 8), ...) this plan targets
     batch_sig: tuple = ()          # batch shape signature the plan was built on
     total_coll_bytes: float = 0.0  # per-device collective bytes per step
+    clip_mode: str = "flat"        # flat | per_layer | stale (coefficient flow)
     _anchor: Any = None            # pins apply_fn identity while cached
 
     def describe(self) -> str:
@@ -338,13 +346,15 @@ class ExecPlan:
         lines = [header, "-" * len(header)]
         for n, lp in self.layers.items():
             stash_mb = lp.stash_bytes / 2**20 if lp.stash else 0.0
+            sum_m = "fused" if lp.fused else sums.get(n, "?")
             lines.append(
                 f"{n:<28} {lp.kind:<10} {lp.norm_method:<8} "
-                f"{sums.get(n, '?'):<9} {lp.norm_flops / 1e6:>9.2f} "
+                f"{sum_m:<9} {lp.norm_flops / 1e6:>9.2f} "
                 f"{lp.contrib_flops / 1e6:>9.2f} {stash_mb:>9.2f} "
                 f"{lp.coll_bytes / 2**20:>9.2f}")
         passes = ("2 fwd + 2 bwd (shared weighted backward)"
                   if self.needs_backward else "1 fwd + 1 bwd")
+        n_fused = sum(lp.fused for lp in self.layers.values())
         lines.append("-" * len(header))
         lines.append(
             f"steady-state passes: {passes}; total norm "
@@ -352,6 +362,10 @@ class ExecPlan:
             f"{self.total_contrib_flops / 1e6:.2f} MF; captures "
             f"{self.capture_bytes / 2**20:.2f} MB, peak stash "
             f"{self.peak_stash_bytes() / 2**20:.2f} MB")
+        lines.append(
+            f"clipping mode: {self.clip_mode}"
+            + (f" ({n_fused} fused single-pass norm+contrib layer"
+               f"{'s' if n_fused != 1 else ''})" if n_fused else ""))
         lines.append(
             f"mesh: {format_mesh(self.mesh)}; predicted collectives "
             f"{self.total_coll_bytes / 2**20:.2f} MB/step/device")
@@ -369,6 +383,7 @@ class ExecPlan:
             "fingerprint": self.fingerprint,
             "mesh": _jsonable(self.mesh),
             "batch_sig": _jsonable(self.batch_sig),
+            "clip_mode": self.clip_mode,
             "needs_backward": self.needs_backward,
             "total_norm_flops": self.total_norm_flops,
             "total_contrib_flops": self.total_contrib_flops,
@@ -418,7 +433,8 @@ class ExecPlan:
                    fingerprint=p["fingerprint"],
                    mesh=_retuple(p.get("mesh", [])),
                    batch_sig=_retuple(p.get("batch_sig", [])),
-                   total_coll_bytes=p.get("total_coll_bytes", 0.0))
+                   total_coll_bytes=p.get("total_coll_bytes", 0.0),
+                   clip_mode=p.get("clip_mode", "flat"))
 
     @classmethod
     def from_json(cls, s: str) -> "ExecPlan":
@@ -447,7 +463,9 @@ def _tree_elems(tree) -> int:
 def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
                 *, norm_method: str, embed_method: str, conv_norm: str,
                 mem_budget: int, vocab: int | None = None,
-                params_sub=None, mesh: tuple = ()) -> LayerPlan:
+                params_sub=None, mesh: tuple = (),
+                clip_mode: str = "flat",
+                clip_fused: bool = True) -> LayerPlan:
     """Costs for one tap.  Stacked (scanned) applications multiply the
     per-application cost; shared stacked dense/scale layers fold the stack
     into the sequence axis first (matching kinds.apply_kind semantics).
@@ -473,8 +491,26 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
         return max(1, -(-int(B) // d))
 
     def _scal_cost(B: int) -> float:
-        # all-reduce of the per-example scalar norms: (B,) float32
+        # all-reduce of the per-example scalar norms: (B,) float32.
+        # Per-layer clipping drops it: a layer's coefficient depends only
+        # on its own norm, which lives on the shard holding the example —
+        # there is no cross-layer total to reduce before the sum phase.
+        if clip_mode == "per_layer":
+            return 0.0
         return COLLECTIVE_FLOPS_PER_BYTE * B * BYTES * ring
+
+    def _fused_credit(read_bytes: float, cand_flops: float) -> float:
+        # Stale coefficients are known entering the pass, so the Gram
+        # norm and the weighted contribution share one HBM read of the
+        # captures (gram_norm_fused) instead of two passes.  The credit
+        # is capped at a sliver of the candidate's own FLOPs so it
+        # breaks near-ties toward fusing but can never flip a layer
+        # whose materializing path holds a real compute advantage (the
+        # CPU/ref realization has no HBM read to save, and even on TPU
+        # the read saving is second-order next to a FLOP gap).
+        if clip_mode == "stale" and clip_fused:
+            return min(HBM_FLOPS_PER_BYTE * read_bytes, 0.05 * cand_flops)
+        return 0.0
 
     def _move_cost(stash_bytes: float) -> float:
         # per-device per-example grads crossing the grad-sync ring
@@ -517,8 +553,12 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
                 m = fallback = "rank1"
             else:
                 per_ex = Bl * mult
-                gram_total = (2.0 * T * T * (Di + Do)
-                              + 2.0 * T * Di * Do) * per_ex + _scal_cost(B)
+                gram_flops = (2.0 * T * T * (Di + Do)
+                              + 2.0 * T * Di * Do) * per_ex
+                gram_total = (gram_flops + _scal_cost(B)
+                              - _fused_credit(
+                                  T * (Di + Do) * BYTES * per_ex,
+                                  gram_flops))
                 stream_stash = (4.0 * T * Di * Do * per_ex
                                 + _move_cost(mem_stash))
                 stream_again = (4.0 * T * Di * Do
@@ -560,8 +600,12 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
         fallback = conv_norm
         if conv_norm == "auto":
             per_ex = Bl * stack
-            ghost_total = ((2.0 * T * T * (F + Dg) + 2.0 * T * F * Dg) * g
-                           * per_ex + _scal_cost(B))
+            ghost_flops = (2.0 * T * T * (F + Dg)
+                           + 2.0 * T * F * Dg) * g * per_ex
+            ghost_total = (ghost_flops + _scal_cost(B)
+                           - _fused_credit(
+                               T * (F + Dg) * g * BYTES * per_ex,
+                               ghost_flops))
             pe_stash = (4.0 * T * F * Dg * g * per_ex
                         + _move_cost(mem_stash))
             pe_again = ((4.0 * T * F * Dg + 2.0 * T * F * Dg) * g * per_ex
@@ -703,7 +747,8 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
                    norm_method: str = "auto", embed_method: str = "auto",
                    conv_norm: str = "auto",
                    mem_budget: int = STREAM_MEM_BUDGET,
-                   overrides=None, mesh=None) -> ExecPlan:
+                   overrides=None, mesh=None, clip_mode: str = "flat",
+                   clip_fused: bool = True) -> ExecPlan:
     """Build the per-layer plan from probed shapes.
 
     Fixed ``norm_method`` / ``embed_method`` / ``conv_norm`` override the
@@ -711,6 +756,15 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
     ``overrides`` pins individual layers by tap-name glob and wins over
     both.  ``mesh`` (anything :func:`mesh_axes` accepts) switches every
     estimate to per-device and charges candidates their collective bytes.
+
+    ``clip_mode`` shapes the plan around the coefficient flow of the
+    executing :class:`~repro.core.clipping.ClipPolicy`: ``per_layer``
+    drops the cross-layer norm all-reduce from the collective model and
+    never selects the shared weighted backward (one backward cannot
+    realize per-layer weights); ``stale`` also drops the backward (the
+    known coefficients make every contraction direct) and, with
+    ``clip_fused``, credits and marks Gram-realized dense/conv layers
+    for the fused single-pass ``gram_norm_fused`` norm+contrib.
     """
     overrides = normalize_overrides(overrides)
     ms = mesh_axes(mesh)
@@ -731,7 +785,8 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
             norm_method=ov or norm_method, embed_method=ov or embed_method,
             conv_norm=ov or conv_norm, mem_budget=mem_budget,
             vocab=_vocab_of(meta, params) if meta.kind == "embed" else None,
-            params_sub=psub, mesh=ms)
+            params_sub=psub, mesh=ms, clip_mode=clip_mode,
+            clip_fused=clip_fused)
         by_path.setdefault(meta.path, []).append(name)
 
     total_wgrad = sum(lp.wgrad_flops for lp in layers.values())
@@ -791,15 +846,19 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
 
     # Greedy backward set: groups whose contraction is dearer than their
     # wgrad share, kept only if the replaced contractions pay for the
-    # whole extra backward.
+    # whole extra backward.  Never under a non-flat clipping mode: one
+    # weighted backward cannot realize per-layer coefficients, and stale
+    # coefficients make every contraction direct (no phase barrier to
+    # amortize a backward against).
     candidates: list[tuple[float, int]] = []
-    for i, g in enumerate(groups):
-        if g.sum_method != "contrib":
-            continue
-        cost_c = sum(layers[n].contrib_flops for n in g.members)
-        cost_b = sum(layers[n].wgrad_flops for n in g.members)
-        if cost_c > cost_b:
-            candidates.append((cost_c, i))
+    if clip_mode == "flat":
+        for i, g in enumerate(groups):
+            if g.sum_method != "contrib":
+                continue
+            cost_c = sum(layers[n].contrib_flops for n in g.members)
+            cost_b = sum(layers[n].wgrad_flops for n in g.members)
+            if cost_c > cost_b:
+                candidates.append((cost_c, i))
 
     saving = sum(s for s, _ in candidates)
     needs_backward = saving > backward_cost
@@ -807,6 +866,25 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
         for _, gi in candidates:
             groups[gi] = dataclasses.replace(groups[gi],
                                              sum_method="backward")
+
+    # Stale coefficients are step-invariant inside the pass: mark the
+    # Gram-realized dense/conv layers for the fused single-pass
+    # norm+contrib (the execution routes them through gram_norm_fused).
+    # Only single-tap groups fuse — tied/shared-path groups keep their
+    # cross-term norm algebra — and only unscanned convs (the fused conv
+    # path has no stacked-axis handling).
+    if clip_mode == "stale" and clip_fused:
+        single = {g.members[0] for g in groups if len(g.members) == 1}
+        for name, lp in layers.items():
+            if name not in single or lp.stash:
+                continue
+            fusable = (
+                (lp.kind == "dense"
+                 and lp.norm_method in ("gram", "pallas"))
+                or (lp.kind == "conv" and metas[name].scanned == 0
+                    and lp.norm_method in ("ghost", "pallas")))
+            if fusable:
+                layers[name] = dataclasses.replace(lp, fused=True)
 
     # Final per-layer collective prediction for the *chosen* realization:
     # norm phase (stash movement vs the scalar all-reduce of the *global*
@@ -842,7 +920,7 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
         total_norm_flops=sum(lp.norm_flops for lp in layers.values()),
         total_contrib_flops=sum(lp.contrib_flops for lp in layers.values()),
         tap_shapes=dict(tap_shapes), capture_bytes=capture_bytes,
-        mesh=ms,
+        mesh=ms, clip_mode=clip_mode,
         total_coll_bytes=sum(lp.coll_bytes for lp in layers.values()))
 
 
@@ -939,10 +1017,17 @@ def _sig_summary(sig) -> str:
 
 
 def check_plan_matches(plan: ExecPlan, *, fingerprint: str | None = None,
-                       mesh=None, batch_sig=None):
+                       mesh=None, batch_sig=None, clip_mode: str | None = None):
     """Validate a deserialized/injected plan against the live context,
-    naming the offending field — mesh shape, batch shape, or fingerprint —
-    so a stale plan fails loudly instead of executing a stale layout."""
+    naming the offending field — mesh shape, batch shape, clipping mode,
+    or fingerprint — so a stale plan fails loudly instead of executing a
+    stale layout."""
+    if clip_mode is not None and plan.clip_mode != clip_mode:
+        raise ValueError(
+            f"stale ExecPlan: clipping mode mismatch — plan "
+            f"{plan.fingerprint or '<unfingerprinted>'} was built for "
+            f"clipping mode {plan.clip_mode!r}, this process clips "
+            f"{clip_mode!r}; re-plan for this policy")
     if mesh is not None:
         ms = mesh_axes(mesh)
         if tuple(plan.mesh) != ms:
@@ -966,27 +1051,30 @@ def check_plan_matches(plan: ExecPlan, *, fingerprint: str | None = None,
 
 
 def _opts_tuple(norm_method, embed_method, conv_norm, mem_budget,
-                overrides, mesh) -> tuple:
+                overrides, mesh, clip_mode="flat", clip_fused=True) -> tuple:
     return (norm_method, embed_method, conv_norm, mem_budget,
-            normalize_overrides(overrides), mesh_axes(mesh))
+            normalize_overrides(overrides), mesh_axes(mesh),
+            (str(clip_mode), bool(clip_fused)))
 
 
 def plan_fingerprint(apply_fn, params, batch, *, norm_method: str = "auto",
                      embed_method: str = "auto", conv_norm: str = "auto",
                      mem_budget: int = STREAM_MEM_BUDGET,
-                     overrides=None, mesh=None) -> str:
+                     overrides=None, mesh=None, clip_mode: str = "flat",
+                     clip_fused: bool = True) -> str:
     """The fingerprint :func:`get_plan` would key this request on — same
     knob normalization, no probe."""
     return model_fingerprint(
         apply_fn, params, batch,
         _opts_tuple(norm_method, embed_method, conv_norm, mem_budget,
-                    overrides, mesh))
+                    overrides, mesh, clip_mode, clip_fused))
 
 
 def get_plan(apply_fn, params, batch, *, norm_method: str = "auto",
              embed_method: str = "auto", conv_norm: str = "auto",
              mem_budget: int = STREAM_MEM_BUDGET,
-             overrides=None, mesh=None) -> ExecPlan:
+             overrides=None, mesh=None, clip_mode: str = "flat",
+             clip_fused: bool = True) -> ExecPlan:
     """Cached planner entry point.  The anchor reference pinned in the
     cached plan keeps ``id(apply_fn.__self__)`` stable for the entry's
     lifetime, so a recycled id can never alias a different model.  A
@@ -996,7 +1084,7 @@ def get_plan(apply_fn, params, batch, *, norm_method: str = "auto",
     batch's plan for a *different* topology raises instead of silently
     re-planning over a stale layout."""
     opts = _opts_tuple(norm_method, embed_method, conv_norm, mem_budget,
-                       overrides, mesh)
+                       overrides, mesh, clip_mode, clip_fused)
     ov, ms = opts[4], opts[5]
     key = plan_cache_key(apply_fn, params, batch, opts)
     plan = _PLAN_CACHE.get(key)
@@ -1014,7 +1102,7 @@ def get_plan(apply_fn, params, batch, *, norm_method: str = "auto",
             # topology blocks planning: re-key the request under the
             # candidate's mesh and compare fingerprints, so an unrelated
             # model that merely shares the batch shape never trips this.
-            cand_opts = opts[:5] + (tuple(cand.mesh),)
+            cand_opts = opts[:5] + (tuple(cand.mesh),) + opts[6:]
             if cand.fingerprint == model_fingerprint(apply_fn, params,
                                                      batch, cand_opts):
                 check_plan_matches(cand, mesh=ms)
@@ -1024,7 +1112,7 @@ def get_plan(apply_fn, params, batch, *, norm_method: str = "auto",
             metas, cap_shapes, tap_shapes, make_taps, params,
             norm_method=norm_method, embed_method=embed_method,
             conv_norm=conv_norm, mem_budget=mem_budget, overrides=ov,
-            mesh=ms)
+            mesh=ms, clip_mode=clip_mode, clip_fused=clip_fused)
         plan = dataclasses.replace(plan, fingerprint=fp, batch_sig=sig)
     object.__setattr__(plan, "_anchor", getattr(apply_fn, "__self__",
                                                 apply_fn))

@@ -42,12 +42,15 @@ import dataclasses
 import functools
 from typing import Any, Callable
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import costmodel
-from repro.core.clipping import DPConfig, dp_gradient, resolve_microbatches
-from repro.core.privacy import PrivacyAccountant
+from repro.core.clipping import (DPConfig, dp_gradient, resolve_budgets,
+                                 resolve_microbatches)
+from repro.core.privacy import PrivacyAccountant, clipping_sensitivity
 
 
 def _spec_of(tree):
@@ -127,12 +130,20 @@ class PrivacyEngine:
                         f"({costmodel.format_mesh(self._mesh_axes)})")
         if plan is not None and self.dp.strategy == "auto":
             # Fail loudly *now* on a stale injected plan, naming the
-            # offending field (mesh shape / batch shape / fingerprint).
+            # offending field (mesh / batch / clip mode / fingerprint).
             costmodel.check_plan_matches(
                 plan, mesh=self._mesh_axes,
                 batch_sig=costmodel._shape_sig(self._batch_spec),
-                fingerprint=self._fingerprint())
+                fingerprint=self._fingerprint(),
+                clip_mode=self.dp.clipping.mode)
         self._plan = plan
+        # Cross-step clipping state: stale mode's lagged norms, and the
+        # per-layer "auto" budget split tracked from observed norm
+        # quantiles.  Device arrays where possible (no host sync on the
+        # stale path).
+        self._prev_norms_sq = None
+        self._budgets = None
+        self._budget_q = None
 
     # -- planning ----------------------------------------------------------
 
@@ -154,9 +165,13 @@ class PrivacyEngine:
 
     def explain(self) -> str:
         """Human-readable per-layer plan table (see ExecPlan.explain)."""
+        clip = self.dp.clipping
         header = (f"PrivacyEngine: strategy={self.dp.strategy} "
                   f"C={self.dp.l2_clip} sigma={self.dp.noise_multiplier} "
-                  f"microbatches={self.microbatches()}"
+                  f"clipping={clip.mode}"
+                  + (f"(budgets={clip.budgets})"
+                     if clip.mode == "per_layer" else "")
+                  + f" microbatches={self.microbatches()}"
                   + ("" if self.dp.microbatches != "auto" else " (auto)")
                   + (f" mesh={costmodel.format_mesh(self._mesh_axes)}"
                      if self._mesh_axes else ""))
@@ -215,11 +230,66 @@ class PrivacyEngine:
     def noisy_grad(self, params, batch, key=None, denom: int | None = None):
         """(mean loss, noised clipped mean gradient, aux).  Eager — safe to
         call under an outer ``jax.jit``; ``private_step`` is the pre-jitted
-        all-in-one."""
+        all-in-one.  Cross-step clipping state (stale norms, auto budgets)
+        is threaded exactly as in ``private_step``."""
         cfg = dataclasses.replace(self.dp, microbatches=self.microbatches())
-        return dp_gradient(self.apply_fn, params, batch, cfg=cfg,
-                           key=self._check_key(key), denom=denom,
-                           plan=self._exec_plan())
+        out = dp_gradient(self.apply_fn, params, batch, cfg=cfg,
+                          key=self._check_key(key), denom=denom,
+                          plan=self._exec_plan(),
+                          clip_state=self._clip_state())
+        self._absorb_clip_aux(out[2])
+        return out
+
+    # -- cross-step clipping state ------------------------------------------
+
+    def _clip_state(self) -> dict:
+        """The clip_state dict for the next step.  Structure changes only
+        once (the stale bootstrap → steady transition), so ``jax.jit``
+        retraces at most twice."""
+        clip = self.dp.clipping
+        if clip.mode == "stale" and self._prev_norms_sq is not None:
+            return {"prev_norms_sq": self._prev_norms_sq}
+        if clip.mode == "per_layer" and clip.budgets == "auto":
+            if self._budgets is None:
+                keys = tuple("/".join(str(p) for p in g.path)
+                             for g in self.plan().groups)
+                self._budgets = resolve_budgets(
+                    clip, self.dp.l2_clip, keys, observed=self._budget_q)
+            # The auto split must keep the clipped sum's sensitivity at C
+            # (Σ C_l² = C²) or the σC noise calibration breaks.
+            sens = clipping_sensitivity(self._budgets)
+            if abs(sens - self.dp.l2_clip) > 1e-3 * self.dp.l2_clip:
+                raise AssertionError(
+                    f"auto budget split broke the sensitivity invariant: "
+                    f"sqrt(sum C_l^2) = {sens} != C = {self.dp.l2_clip}")
+            return {"budgets": self._budgets}
+        return {}
+
+    def _absorb_clip_aux(self, aux: dict):
+        """Host-side bookkeeping after a step: thread stale norms, update
+        the per-layer norm quantile EMA driving ``budgets="auto"``."""
+        clip = self.dp.clipping
+        leaves = jax.tree.leaves(aux)
+        if leaves and isinstance(leaves[0], jax.core.Tracer):
+            # noisy_grad under an outer jit: the caller owns the loop and
+            # must thread the clip state itself — storing tracers as
+            # cross-step state would poison the next eager step.
+            return
+        if clip.mode == "stale":
+            self._prev_norms_sq = aux["clip_state"]["prev_norms_sq"]
+        elif clip.mode == "per_layer" and clip.budgets == "auto":
+            q = np.quantile(np.asarray(aux["per_layer_norms"], np.float64),
+                            clip.quantile, axis=1)
+            q = np.maximum(q, 1e-12)
+            if self._budget_q is None:
+                self._budget_q = q
+            else:
+                self._budget_q = clip.ema * self._budget_q \
+                    + (1.0 - clip.ema) * q
+            keys = tuple("/".join(str(p) for p in g.path)
+                         for g in self.plan().groups)
+            self._budgets = resolve_budgets(
+                clip, self.dp.l2_clip, keys, observed=self._budget_q)
 
     @functools.cached_property
     def _jit_step(self):
@@ -228,9 +298,10 @@ class PrivacyEngine:
         update_fn, lr, wd = self._update_fn, self._lr, self._weight_decay
         apply_fn = self.apply_fn
 
-        def step(params, opt, batch, key):
+        def step(params, opt, batch, key, clip_state):
             loss, grad, aux = dp_gradient(apply_fn, params, batch, cfg=cfg,
-                                          key=key, plan=plan)
+                                          key=key, plan=plan,
+                                          clip_state=clip_state)
             lr_t = lr(opt["step"]) if callable(lr) else lr
             params, opt = update_fn(grad, opt, params, lr=lr_t,
                                     weight_decay=wd)
@@ -239,16 +310,18 @@ class PrivacyEngine:
         if self.mesh is None:
             return jax.jit(step)
         # Explicit shardings: batch over the data axes, everything else —
-        # params, optimizer state, PRNG key, and every output — replicated.
-        # Per-example norms and the clipped sum reduce globally under SPMD
-        # (the clip coefficients see the psum'd global norm), and the
-        # noise is drawn from the one replicated key, so each device adds
-        # identical noise rather than independent per-shard draws.
+        # params, optimizer state, PRNG key, clip state, and every output
+        # — replicated.  Per-example norms and the clipped sum reduce
+        # globally under SPMD (flat clip coefficients see the psum'd
+        # global norm; per-layer norms are psum'd the same way, per
+        # group), and the noise is drawn from the one replicated key, so
+        # each device adds identical noise rather than independent
+        # per-shard draws.
         from repro.launch.sharding import batch_sharding
         from jax.sharding import NamedSharding, PartitionSpec as P
         repl = NamedSharding(self.mesh, P())
         batch_sh = batch_sharding(self._batch_spec, self.mesh)
-        return jax.jit(step, in_shardings=(repl, repl, batch_sh, repl),
+        return jax.jit(step, in_shardings=(repl, repl, batch_sh, repl, repl),
                        out_shardings=repl)
 
     def private_step(self, params, opt, batch, key=None):
@@ -257,8 +330,16 @@ class PrivacyEngine:
         accountant bookkeeping.  With a mesh the closure is jitted with
         explicit shardings (batch on the data axes; params, optimizer
         state, key, and outputs replicated).  Returns (params, opt, loss,
-        aux)."""
-        out = self._jit_step(params, opt, batch, self._check_key(key))
+        aux).
+
+        Non-flat clipping modes thread state across steps: ``stale``
+        feeds this step's norms to the next step's coefficients (the
+        first step bootstraps with exact flat clipping); ``per_layer``
+        with ``budgets="auto"`` re-splits the budget from the tracked
+        per-layer norm quantiles after every step."""
+        out = self._jit_step(params, opt, batch, self._check_key(key),
+                             self._clip_state())
+        self._absorb_clip_aux(out[3])
         if self.accountant is not None:
             self.accountant.step()
         return out

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import costmodel
-from repro.core.tapper import LayerMeta
+from repro.core.tapper import STATS, LayerMeta
 
 F32 = jnp.float32
 
@@ -133,6 +133,7 @@ def dense_norm_and_contrib(meta: LayerMeta, cap, dy, w, *,
     """
     if method == "pallas":
         from repro.kernels import ops as kops
+        STATS.fused += 1
         x, g = _flatten_seq(cap["x"]), _flatten_seq(dy)
         n, cw, cb = kops.gram_norm_fused(x, g, w,
                                          has_bias=bool(meta.bias_key))
@@ -398,6 +399,54 @@ def conv_norm_sq(meta: LayerMeta, cap, dy, impl: str = "fgc",
     return _sumsq(conv_pe_grad(meta, cap, dy, impl=impl))
 
 
+def conv_norm_and_contrib(meta: LayerMeta, cap, dy, w, *,
+                          use_pallas: bool = True):
+    """Fused conv ghost-norm + weighted weight gradient: im2col the input
+    and run the dense fused pass per group — the contribution
+    Σ_b w_b x̃_bᵀ δy_b *is* the weighted conv weight gradient in patch
+    space (channel-major / filter-position-minor, matching the
+    (D, C/g, *K) weight layout), so the reshape back is free.  Requires
+    the weights to be known entering the pass (stale-coefficient
+    pipelines)."""
+    from repro.models.convops import unfold_patches
+    st = meta.static
+    x = cap["x"]
+    g = max(st.get("groups", 1), 1)
+    kshape = st["kernel_shape"]
+    patches = unfold_patches(x, kshape[2:], stride=st["stride"],
+                             dilation=st["dilation"], padding=st["padding"])
+    B, CK, T = patches.shape
+    D = dy.shape[1]
+    gy = dy.reshape(B, D, T)
+    method = "pallas" if use_pallas else "stream"
+    if g == 1:
+        meta_d = LayerMeta("dense", meta.path, param_key=meta.param_key,
+                           bias_key=meta.bias_key)
+        n, out = dense_norm_and_contrib(
+            meta_d, {"x": patches.transpose(0, 2, 1)},
+            gy.transpose(0, 2, 1), w, method=method)
+        out[meta.param_key] = out[meta.param_key].T.reshape(kshape)
+        return n, out
+    Fg, Dg = CK // g, D // g
+    xg = patches.reshape(B, g, Fg, T)
+    gg = gy.reshape(B, g, Dg, T)
+    meta_d = LayerMeta("dense", meta.path, param_key=meta.param_key)
+    n = jnp.zeros((B,), F32)
+    w_parts = []
+    for gi in range(g):
+        n_i, out = dense_norm_and_contrib(
+            meta_d, {"x": xg[:, gi].transpose(0, 2, 1)},
+            gg[:, gi].transpose(0, 2, 1), w, method=method)
+        n = n + n_i
+        w_parts.append(out[meta.param_key].T.reshape((Dg,) + tuple(kshape[1:])))
+    res = {meta.param_key: jnp.concatenate(w_parts, axis=0)}
+    if meta.bias_key:
+        sb = jnp.sum(gy.astype(F32), axis=2)                    # (B, D)
+        n = n + jnp.sum(jnp.square(sb), axis=1)
+        res[meta.bias_key] = _ee("b,bo->o", w.astype(F32), sb)
+    return n, res
+
+
 def conv_contrib(meta: LayerMeta, cap, dy, w):
     from repro.models.convops import conv_forward
     st = meta.static
@@ -562,6 +611,51 @@ def apply_kind(op: str, meta: LayerMeta, cap, dy, *, params_sub=None,
                        weights=weights, norm_method=norm_method,
                        conv_impl=conv_impl, embed_method=embed_method,
                        conv_norm=conv_norm)
+
+
+def apply_norm_contrib(meta: LayerMeta, cap, dy, *, weights,
+                       params_sub=None, fused: bool = True,
+                       conv_impl: str = "fgc", norm_method: str = "auto",
+                       embed_method: str = "segsum",
+                       conv_norm: str = "auto"):
+    """Per-example squared norms *and* the weighted sum Σ_b w_b·g_b from
+    one pass over the captures.  Valid whenever the weights are known
+    entering the pass (stale-coefficient clipping).
+
+    Dense (non-segmented) and conv layers route to the fused
+    ``gram_norm_fused`` realizations when ``fused``; every other kind —
+    and the non-fused request — falls back to its norm_sq + contrib pair
+    (still a single capture pass of the model: no extra forward or
+    backward, just two reductions over the same tensors)."""
+    if fused and meta.kind == "dense" and not meta.segmented:
+        if meta.shared and meta.scanned:
+            cap2, dy2 = _fold_into_seq(meta, cap, dy)
+            return dense_norm_and_contrib(_unscanned(meta), cap2, dy2,
+                                          weights, method="pallas")
+        if not meta.scanned:
+            return dense_norm_and_contrib(meta, cap, dy, weights,
+                                          method="pallas")
+        cap_f, dy_f, stack_shape = _split_stack(meta, cap, dy)
+        meta_f = _unscanned(meta)
+
+        def one(xs):
+            c, d = xs
+            return dense_norm_and_contrib(meta_f, c, d, weights,
+                                          method="pallas")
+
+        n, contrib = jax.lax.map(one, (cap_f, dy_f))
+        n = jnp.sum(n, axis=0)
+        contrib = jax.tree.map(
+            lambda a: a.reshape(stack_shape + a.shape[1:]), contrib)
+        return n, contrib
+    if fused and meta.kind == "conv" and not meta.scanned:
+        return conv_norm_and_contrib(meta, cap, dy, weights, use_pallas=True)
+    n = apply_kind("norm_sq", meta, cap, dy, params_sub=params_sub,
+                   norm_method=norm_method, conv_impl=conv_impl,
+                   embed_method=embed_method, conv_norm=conv_norm)
+    c = apply_kind("contrib", meta, cap, dy, params_sub=params_sub,
+                   weights=weights, conv_impl=conv_impl)
+    return n, c
 
 
 def _unscanned(meta: LayerMeta) -> LayerMeta:

@@ -12,6 +12,27 @@ composed linearly over steps, then converted to (ε, δ) via
 
 Pure numpy — no jax dependency — so the accountant can run on the host
 alongside a training loop.
+
+Clipping-mode accounting notes
+------------------------------
+The accountant only assumes the mechanism's L2 sensitivity is the ``C``
+the noise σC was calibrated against.
+
+  * ``flat``      — each example's contribution is clipped to ‖·‖ ≤ C:
+    sensitivity C, exactly.
+  * ``per_layer`` — layer l clipped to C_l; an example's total
+    contribution satisfies ‖·‖² = Σ_l ‖clip_l‖² ≤ Σ_l C_l², so the
+    budget invariant Σ_l C_l² = C² (enforced by
+    ``clipping.resolve_budgets`` and checked with
+    :func:`clipping_sensitivity`) keeps the sensitivity at C with the
+    same accountant.
+  * ``stale``     — coefficients come from the *previous* step's norms,
+    so this step's contribution is bounded by C only under the lagged
+    norms, not unconditionally; the engine's bootstrap step is exact,
+    and steady-state steps are "exactly-as-specified-stale" (the oracle
+    suite pins that semantics).  Treat ε reported under stale clipping
+    as conditional on the staleness assumption — this is the documented
+    trade of Lee & Kifer-style reorganized clipping passes.
 """
 from __future__ import annotations
 
@@ -20,6 +41,15 @@ import math
 import numpy as np
 
 DEFAULT_ORDERS = tuple(range(2, 64)) + tuple(range(64, 513, 8))
+
+
+def clipping_sensitivity(budgets) -> float:
+    """L2 sensitivity of a per-layer-clipped per-example contribution:
+    ``sqrt(Σ_l C_l²)``.  The noise calibration σ·C stays valid exactly
+    when this equals the configured ``C`` — the invariant every budget
+    split must preserve (property-tested in tests/test_clip_modes.py)."""
+    b = np.asarray(budgets, np.float64)
+    return float(np.sqrt(np.sum(b * b)))
 
 
 def _log_binom(n: int, k: int) -> float:

@@ -130,13 +130,23 @@ def crb_per_example_grads(apply_fn, params, batch, *, conv_impl: str = "fgc",
 # ghost norms (shared by ghost & bk)
 
 
-def ghost_norms_from_captures(params, caps, dtaps, metas, *,
+def group_key_of(path: tuple) -> str:
+    """The clip-budget key of a parameter group: its "/"-joined path."""
+    return "/".join(str(p) for p in path)
+
+
+def group_norms_from_captures(params, caps, dtaps, metas, *,
                               norm_method: str = "auto",
                               conv_impl: str = "fgc",
                               embed_method: str = "segsum",
                               conv_norm: str = "auto"):
-    """Per-example squared norms of the full gradient, grouping taps that
-    touch the same parameter (tied embeddings, shared blocks)."""
+    """Per-parameter-group per-example squared grad norms, grouping taps
+    that touch the same parameter (tied embeddings, shared blocks).
+
+    Returns ``(group_keys, norms)`` with ``norms`` of shape (G, B), in
+    sorted-path order — the same deterministic group order the planner's
+    :class:`~repro.core.costmodel.ExecPlan` uses, so per-layer clip
+    budgets resolved against either align."""
     by_param = defaultdict(list)
     for name, meta in metas.items():
         by_param[meta.path].append(name)
@@ -144,30 +154,31 @@ def ghost_norms_from_captures(params, caps, dtaps, metas, *,
     # Segmented taps' leading axes are slots, not examples — the example
     # count comes from their static metadata (same rule as _batch_size).
     B = _batch_size(metas, dtaps)
-    total = jnp.zeros((B,), jnp.float32)
+    keys, norms = [], []
 
-    for path, names in by_param.items():
+    for path, names in sorted(by_param.items()):
+        keys.append(group_key_of(path))
         psub = get_subtree(params, path)
         if len(names) == 1:
             n = names[0]
-            total = total + kinds.apply_kind(
+            norms.append(kinds.apply_kind(
                 "norm_sq", metas[n], caps[n], dtaps[n], params_sub=psub,
                 norm_method=norm_method, conv_impl=conv_impl,
-                embed_method=embed_method, conv_norm=conv_norm)
+                embed_method=embed_method, conv_norm=conv_norm))
             continue
         ks = sorted((metas[n].kind, metas[n].w_transposed) for n in names)
         if ks == [("dense", True), ("embed", False)] and len(names) == 2:
             # Tied embedding + LM head: per-tap norms plus the cross term.
             n_e = next(n for n in names if metas[n].kind == "embed")
             n_d = next(n for n in names if metas[n].kind == "dense")
-            total = total + kinds.apply_kind(
+            n_g = kinds.apply_kind(
                 "norm_sq", metas[n_e], caps[n_e], dtaps[n_e], params_sub=psub,
                 embed_method=embed_method)
-            total = total + kinds.apply_kind(
+            n_g = n_g + kinds.apply_kind(
                 "norm_sq", metas[n_d], caps[n_d], dtaps[n_d], params_sub=psub,
                 norm_method=norm_method)
-            total = total + kinds.tied_embed_head_cross(
-                caps[n_e], dtaps[n_e], caps[n_d], dtaps[n_d])
+            norms.append(n_g + kinds.tied_embed_head_cross(
+                caps[n_e], dtaps[n_e], caps[n_d], dtaps[n_d]))
             continue
         # Generic exact fallback: materialize the summed per-example grad.
         pe_sum: dict = {}
@@ -176,8 +187,17 @@ def ghost_norms_from_captures(params, caps, dtaps, metas, *,
                                   params_sub=psub, conv_impl=conv_impl)
             for k, v in pe.items():
                 pe_sum[k] = pe_sum[k] + v if k in pe_sum else v
-        total = total + kinds._sumsq(pe_sum)
-    return total
+        norms.append(kinds._sumsq(pe_sum))
+    if not norms:
+        raise ValueError("no tapped layers")
+    return tuple(keys), jnp.stack(norms)
+
+
+def ghost_norms_from_captures(params, caps, dtaps, metas, **kw):
+    """Per-example squared norms of the *full* gradient (the flat-mode
+    total): sum of the per-group norms."""
+    _, norms = group_norms_from_captures(params, caps, dtaps, metas, **kw)
+    return jnp.sum(norms, axis=0)
 
 
 def ghost_norms(apply_fn, params, batch, **kw):
@@ -195,17 +215,41 @@ def clip_coefficients(norms_sq, l2_clip, eps: float = 1e-12):
     return jnp.minimum(1.0, l2_clip / norms)
 
 
+def per_layer_clip_coefficients(group_norms_sq, budgets, eps: float = 1e-12):
+    """(G, B) coefficients: each group clipped against its own budget."""
+    norms = jnp.sqrt(group_norms_sq + eps)
+    return jnp.minimum(1.0, budgets[:, None] / norms)
+
+
 def _pe_tree_norms_sq(pe_grads):
     return kinds._sumsq(pe_grads)
 
 
-def clipped_grad_sum(apply_fn, params, batch, *, l2_clip: float,
-                     strategy: str = "ghost", norm_method: str = "auto",
-                     conv_impl: str = "fgc", check: bool = False,
-                     embed_method: str = "segsum",
-                     conv_norm: str | None = None, overrides=None,
-                     mem_budget: int | None = None, plan=None):
-    """Returns (per-example losses, Σ_b clip(g_b), per-example norms²).
+def _flat_detail(coef):
+    return {"group_keys": (), "group_norms_sq": None, "coef": coef,
+            "budgets": None}
+
+
+def clipped_grad_sum(apply_fn, params, batch, **kw):
+    """Returns (per-example losses, Σ_b clip(g_b), per-example norms²) —
+    see :func:`clipped_grad_sum_detailed` for the keyword surface; this
+    wrapper drops the detail dict."""
+    losses, gsum, norms_sq, _ = clipped_grad_sum_detailed(
+        apply_fn, params, batch, **kw)
+    return losses, gsum, norms_sq
+
+
+def clipped_grad_sum_detailed(apply_fn, params, batch, *, l2_clip: float,
+                              strategy: str = "ghost",
+                              norm_method: str = "auto",
+                              conv_impl: str = "fgc", check: bool = False,
+                              embed_method: str = "segsum",
+                              conv_norm: str | None = None, overrides=None,
+                              mem_budget: int | None = None, plan=None,
+                              clip_policy=None, budgets=None,
+                              prev_norms_sq=None):
+    """Returns (per-example losses, Σ_b clip(g_b), per-example norms²,
+    detail).
 
     ``conv_norm`` (auto | ghost | pe) picks the conv norm realization; the
     historical ``None`` sentinel is a deprecated alias for ``"auto"`` (the
@@ -213,17 +257,42 @@ def clipped_grad_sum(apply_fn, params, batch, *, l2_clip: float,
     requested explicitly).  ``overrides`` pins individual layers by
     tap-name glob (planned strategy only); ``plan`` injects a pre-built,
     possibly deserialized ExecPlan, skipping the cached planner lookup.
+
+    ``clip_policy`` (a :class:`~repro.core.clipping.ClipPolicy`; None =
+    flat) selects the clipping mode; non-flat modes require the planned
+    (``auto``) or book-keeping (``bk``) strategy, whose coefficient flow
+    is per layer.  ``budgets`` injects a resolved (G,) per-layer budget
+    array (else the policy's static split is resolved against the sorted
+    group keys); ``prev_norms_sq`` feeds stale mode's lagged (B,) norms.
+
+    ``detail``: ``group_keys`` (static tuple), ``group_norms_sq`` ((G, B)
+    under per_layer, else None), ``coef`` (the applied coefficients —
+    (B,) flat/stale, (G, B) per_layer), ``budgets`` ((G,) under
+    per_layer, else None).
     """
+    mode = clip_policy.mode if clip_policy is not None else "flat"
+    if mode != "flat" and strategy not in ("auto", "bk"):
+        raise ValueError(
+            f"clipping mode {mode!r} requires strategy 'auto' or 'bk', "
+            f"got {strategy!r}")
+    if mode == "stale" and prev_norms_sq is None:
+        raise ValueError(
+            "stale clipping needs prev_norms_sq (the engine bootstraps "
+            "the first step with flat clipping and threads the state)")
     if strategy == "auto":
         if plan is None:
             plan = costmodel.get_plan(
                 apply_fn, params, batch, norm_method=norm_method,
                 embed_method=embed_method, conv_norm=conv_norm or "auto",
                 mem_budget=mem_budget or costmodel.STREAM_MEM_BUDGET,
-                overrides=overrides)
+                overrides=overrides, clip_mode=mode,
+                clip_fused=(clip_policy.fused if clip_policy is not None
+                            else True))
         return planned_clipped_sum(apply_fn, params, batch, plan,
                                    l2_clip=l2_clip, conv_impl=conv_impl,
-                                   check=check)
+                                   check=check, clip_policy=clip_policy,
+                                   budgets=budgets,
+                                   prev_norms_sq=prev_norms_sq)
     if strategy in ("naive", "multi", "crb"):
         if strategy == "naive":
             losses, pe = naive_per_example_grads(apply_fn, params, batch)
@@ -237,14 +306,39 @@ def clipped_grad_sum(apply_fn, params, batch, *, l2_clip: float,
         gsum = jax.tree.map(
             lambda g: jnp.einsum("b...,b->...", g.astype(jnp.float32), coef),
             pe)
-        return losses, gsum, norms_sq
+        return losses, gsum, norms_sq, _flat_detail(coef)
 
     losses, caps, dtaps, metas = _capture(apply_fn, params, batch)
-    norms_sq = ghost_norms_from_captures(
+    group_keys, group_ns = group_norms_from_captures(
         params, caps, dtaps, metas, norm_method=norm_method,
         conv_impl=conv_impl, embed_method=embed_method,
         conv_norm=conv_norm or "auto")
-    coef = lax.stop_gradient(clip_coefficients(norms_sq, l2_clip))
+    norms_sq = jnp.sum(group_ns, axis=0)
+
+    if mode == "per_layer":
+        if budgets is None:
+            from repro.core.clipping import resolve_budgets
+            budgets = resolve_budgets(clip_policy, l2_clip, group_keys)
+        coef = lax.stop_gradient(
+            per_layer_clip_coefficients(group_ns, budgets))      # (G, B)
+        detail = {"group_keys": group_keys, "group_norms_sq": group_ns,
+                  "coef": coef, "budgets": budgets}
+        gi_of = {k: i for i, k in enumerate(group_keys)}
+
+        def weight_of(meta):
+            return coef[gi_of[group_key_of(meta.path)]]
+    elif mode == "stale":
+        coef = lax.stop_gradient(clip_coefficients(prev_norms_sq, l2_clip))
+        detail = _flat_detail(coef)
+
+        def weight_of(meta):
+            return coef
+    else:
+        coef = lax.stop_gradient(clip_coefficients(norms_sq, l2_clip))
+        detail = _flat_detail(coef)
+
+        def weight_of(meta):
+            return coef
 
     if strategy == "ghost":
         def wloss(p):
@@ -254,22 +348,22 @@ def clipped_grad_sum(apply_fn, params, batch, *, l2_clip: float,
         STATS.forwards += 1
         STATS.backwards += 1
         gsum = jax.grad(wloss)(params)
-        return losses, gsum, norms_sq
+        return losses, gsum, norms_sq, detail
 
     if strategy == "bk":
         acc: dict = {}
         for name, meta in metas.items():
             contrib = kinds.apply_kind(
                 "contrib", meta, caps[name], dtaps[name],
-                params_sub=get_subtree(params, meta.path), weights=coef,
-                conv_impl=conv_impl)
+                params_sub=get_subtree(params, meta.path),
+                weights=weight_of(meta), conv_impl=conv_impl)
             _accumulate_param_grads(acc, meta.path, contrib)
         gsum = _grads_to_tree(acc)
         if check:
             missing = check_coverage(params, gsum)
             if missing:
                 raise ValueError(f"bk missing param contribs: {missing}")
-        return losses, gsum, norms_sq
+        return losses, gsum, norms_sq, detail
 
     raise ValueError(f"unknown strategy {strategy!r}")
 
@@ -297,17 +391,127 @@ def _norm_kwargs(lp):
     return {}
 
 
+def _planned_group_norm(g, plan, metas, caps, dtaps, params, conv_impl,
+                        stash):
+    """Phase-1 norm of one plan group: (B,) squared norms, stashing any
+    per-example grads the chosen realization materialized."""
+    psub = get_subtree(params, g.path)
+    if g.norm_mode == "single":
+        n = g.members[0]
+        lp, meta = plan.layers[n], metas[n]
+        if lp.stash:
+            pe = kinds.apply_kind("pe_grad", meta, caps[n], dtaps[n],
+                                  params_sub=psub, conv_impl=conv_impl)
+            stash[n] = pe
+            return kinds._sumsq(pe)
+        return kinds.apply_kind(
+            "norm_sq", meta, caps[n], dtaps[n], params_sub=psub,
+            conv_impl=conv_impl, **_norm_kwargs(lp))
+    if g.norm_mode == "tied":
+        n_e = next(n for n in g.members if metas[n].kind == "embed")
+        n_d = next(n for n in g.members if metas[n].kind == "dense")
+        n_g = kinds.apply_kind(
+            "norm_sq", metas[n_e], caps[n_e], dtaps[n_e],
+            params_sub=psub, **_norm_kwargs(plan.layers[n_e]))
+        n_g = n_g + kinds.apply_kind(
+            "norm_sq", metas[n_d], caps[n_d], dtaps[n_d],
+            params_sub=psub, **_norm_kwargs(plan.layers[n_d]))
+        return n_g + kinds.tied_embed_head_cross(
+            caps[n_e], dtaps[n_e], caps[n_d], dtaps[n_d])
+    # group_pe: exact generic fallback, materialized once
+    pe_sum: dict = {}
+    for n in g.members:
+        pe = kinds.apply_kind("pe_grad", metas[n], caps[n], dtaps[n],
+                              params_sub=psub, conv_impl=conv_impl)
+        for k, v in pe.items():
+            pe_sum[k] = pe_sum[k] + v if k in pe_sum else v
+    if g.sum_method == "stash":
+        stash[g.path] = pe_sum
+    return kinds._sumsq(pe_sum)
+
+
+def _weighted_stash_sum(pe, w):
+    return jax.tree.map(
+        lambda leaf: jnp.einsum("b...,b->...", leaf.astype(jnp.float32), w),
+        pe)
+
+
+def _stale_group_norm_contrib(g, plan, metas, caps, dtaps, params, coef,
+                              conv_impl, fused_ok, acc):
+    """Stale-coefficient single pass over one plan group: the norm (for
+    the *next* step's coefficients) and the weighted contribution come
+    from the same captures, with the fused ``gram_norm_fused``
+    realization where the plan selected it."""
+    psub = get_subtree(params, g.path)
+    if g.norm_mode == "single":
+        n = g.members[0]
+        lp, meta = plan.layers[n], metas[n]
+        if lp.fused and fused_ok:
+            n_g, contrib = kinds.apply_norm_contrib(
+                meta, caps[n], dtaps[n], weights=coef, params_sub=psub,
+                fused=True, conv_impl=conv_impl, **_norm_kwargs(lp))
+            _accumulate_param_grads(acc, g.path, contrib)
+            return n_g
+        if lp.stash:
+            pe = kinds.apply_kind("pe_grad", meta, caps[n], dtaps[n],
+                                  params_sub=psub, conv_impl=conv_impl)
+            _accumulate_param_grads(acc, g.path, _weighted_stash_sum(pe, coef))
+            return kinds._sumsq(pe)
+        n_g = kinds.apply_kind(
+            "norm_sq", meta, caps[n], dtaps[n], params_sub=psub,
+            conv_impl=conv_impl, **_norm_kwargs(lp))
+        _accumulate_param_grads(acc, g.path, kinds.apply_kind(
+            "contrib", meta, caps[n], dtaps[n], params_sub=psub,
+            weights=coef, conv_impl=conv_impl))
+        return n_g
+    if g.norm_mode == "tied":
+        stash: dict = {}
+        n_g = _planned_group_norm(g, plan, metas, caps, dtaps, params,
+                                  conv_impl, stash)
+        for n in g.members:
+            _accumulate_param_grads(acc, g.path, kinds.apply_kind(
+                "contrib", metas[n], caps[n], dtaps[n], params_sub=psub,
+                weights=coef, conv_impl=conv_impl))
+        return n_g
+    # group_pe: the materialized summed per-example grad serves both.
+    pe_sum: dict = {}
+    for n in g.members:
+        pe = kinds.apply_kind("pe_grad", metas[n], caps[n], dtaps[n],
+                              params_sub=psub, conv_impl=conv_impl)
+        for k, v in pe.items():
+            pe_sum[k] = pe_sum[k] + v if k in pe_sum else v
+    _accumulate_param_grads(acc, g.path, _weighted_stash_sum(pe_sum, coef))
+    return kinds._sumsq(pe_sum)
+
+
 def planned_clipped_sum(apply_fn, params, batch, plan, *, l2_clip: float,
-                        conv_impl: str = "fgc", check: bool = False):
+                        conv_impl: str = "fgc", check: bool = False,
+                        clip_policy=None, budgets=None, prev_norms_sq=None):
     """Execute a :class:`~repro.core.costmodel.ExecPlan`: one capture
     backward, per-layer planned norms (stashing any per-example grads the
     norm phase materialized), then the clipped sum from stashes /
     book-keeping contractions / at most one shared weighted backward.
 
+    Returns (losses, gsum, total norms², detail) — see
+    :func:`clipped_grad_sum_detailed` for the detail contract.
+
+    The clipping mode generalizes the coefficient flow: ``flat`` applies
+    one (B,) coefficient vector everywhere; ``per_layer`` gives each
+    parameter group its own (B,) coefficients from its own norms and
+    budget (so the shared weighted backward, which can only realize one
+    weight per example, is never planned); ``stale`` knows every
+    coefficient *entering* the pass and collapses norm + sum into one
+    sweep over the captures, fused (``gram_norm_fused``) where the plan
+    marked it.  The plan must have been built for the executing mode —
+    a mismatch fails loudly, like any other stale-plan field.
+
     Layer metadata comes from the capture trace itself (the *live* metas),
     not the plan: a deserialized plan cannot carry ``local_vjp`` closures,
     and validating the name sets against each other makes a stale plan fail
     loudly instead of silently misassigning decisions."""
+    mode = clip_policy.mode if clip_policy is not None else "flat"
+    fused_ok = clip_policy.fused if clip_policy is not None else True
+    costmodel.check_plan_matches(plan, clip_mode=mode)
     losses, caps, dtaps, metas = capture_backward(
         apply_fn, params, batch, plan.make_taps(), with_metas=True)
     if set(metas) != set(plan.layers):
@@ -319,75 +523,78 @@ def planned_clipped_sum(apply_fn, params, batch, plan, *, l2_clip: float,
             f"match this model: plan-only layers {missing}, model-only "
             f"layers {extra} — re-plan (stale or mismatched serialized "
             f"plan?)")
-    B = _batch_size(metas, dtaps)
-    total = jnp.zeros((B,), jnp.float32)
+    group_keys = tuple(group_key_of(g.path) for g in plan.groups)
+    if mode != "flat":
+        bad = [group_keys[i] for i, g in enumerate(plan.groups)
+               if g.sum_method == "backward"]
+        if bad:
+            raise ValueError(
+                f"plan uses the shared weighted backward for {bad} — "
+                f"incompatible with clipping mode {mode!r} (re-plan)")
+
+    if mode == "stale":
+        if prev_norms_sq is None:
+            raise ValueError("stale clipping needs prev_norms_sq")
+        coef = lax.stop_gradient(clip_coefficients(prev_norms_sq, l2_clip))
+        acc: dict = {}
+        total = 0.0
+        for g in plan.groups:
+            total = total + _stale_group_norm_contrib(
+                g, plan, metas, caps, dtaps, params, coef, conv_impl,
+                fused_ok, acc)
+        gsum = _grads_to_tree(acc)
+        if check:
+            missing = check_coverage(params, gsum)
+            if missing:
+                raise ValueError(f"auto missing param contribs: {missing}")
+        return losses, gsum, total, _flat_detail(coef)
+
     stash: dict = {}
+    group_ns = jnp.stack([
+        _planned_group_norm(g, plan, metas, caps, dtaps, params, conv_impl,
+                            stash)
+        for g in plan.groups])                                   # (G, B)
+    total = jnp.sum(group_ns, axis=0)
 
-    for g in plan.groups:
-        psub = get_subtree(params, g.path)
-        if g.norm_mode == "single":
-            n = g.members[0]
-            lp, meta = plan.layers[n], metas[n]
-            if lp.stash:
-                pe = kinds.apply_kind("pe_grad", meta, caps[n], dtaps[n],
-                                      params_sub=psub, conv_impl=conv_impl)
-                stash[n] = pe
-                total = total + kinds._sumsq(pe)
-            else:
-                total = total + kinds.apply_kind(
-                    "norm_sq", meta, caps[n], dtaps[n], params_sub=psub,
-                    conv_impl=conv_impl, **_norm_kwargs(lp))
-        elif g.norm_mode == "tied":
-            n_e = next(n for n in g.members if metas[n].kind == "embed")
-            n_d = next(n for n in g.members if metas[n].kind == "dense")
-            total = total + kinds.apply_kind(
-                "norm_sq", metas[n_e], caps[n_e], dtaps[n_e],
-                params_sub=psub, **_norm_kwargs(plan.layers[n_e]))
-            total = total + kinds.apply_kind(
-                "norm_sq", metas[n_d], caps[n_d], dtaps[n_d],
-                params_sub=psub, **_norm_kwargs(plan.layers[n_d]))
-            total = total + kinds.tied_embed_head_cross(
-                caps[n_e], dtaps[n_e], caps[n_d], dtaps[n_d])
-        else:  # group_pe: exact generic fallback, materialized once
-            pe_sum: dict = {}
-            for n in g.members:
-                pe = kinds.apply_kind("pe_grad", metas[n], caps[n], dtaps[n],
-                                      params_sub=psub, conv_impl=conv_impl)
-                for k, v in pe.items():
-                    pe_sum[k] = pe_sum[k] + v if k in pe_sum else v
-            if g.sum_method == "stash":
-                stash[g.path] = pe_sum
-            total = total + kinds._sumsq(pe_sum)
-
-    coef = lax.stop_gradient(clip_coefficients(total, l2_clip))
+    if mode == "per_layer":
+        if budgets is None:
+            from repro.core.clipping import resolve_budgets
+            budgets = resolve_budgets(clip_policy, l2_clip, group_keys)
+        coef = lax.stop_gradient(
+            per_layer_clip_coefficients(group_ns, budgets))      # (G, B)
+        detail = {"group_keys": group_keys, "group_norms_sq": group_ns,
+                  "coef": coef, "budgets": budgets}
+        weights = list(coef)
+    else:
+        flat_coef = lax.stop_gradient(clip_coefficients(total, l2_clip))
+        detail = _flat_detail(flat_coef)
+        weights = [flat_coef] * len(plan.groups)
 
     wgrads = None
     if plan.needs_backward:
         def wloss(p):
             losses2 = apply_fn(p, batch, Tapper())
-            return jnp.sum(losses2 * coef)
+            return jnp.sum(losses2 * detail["coef"])
 
         STATS.forwards += 1
         STATS.backwards += 1
         wgrads = jax.grad(wloss)(params)
 
     acc: dict = {}
-    for g in plan.groups:
+    for gi, g in enumerate(plan.groups):
+        w = weights[gi]
         if g.sum_method == "backward":
             _accumulate_param_grads(acc, g.path, get_subtree(wgrads, g.path))
             continue
         if g.sum_method == "stash":
             pe = stash[g.members[0] if g.norm_mode == "single" else g.path]
-            contrib = jax.tree.map(
-                lambda leaf: jnp.einsum(
-                    "b...,b->...", leaf.astype(jnp.float32), coef), pe)
-            _accumulate_param_grads(acc, g.path, contrib)
+            _accumulate_param_grads(acc, g.path, _weighted_stash_sum(pe, w))
             continue
         psub = get_subtree(params, g.path)
         for n in g.members:
             contrib = kinds.apply_kind(
                 "contrib", metas[n], caps[n], dtaps[n], params_sub=psub,
-                weights=coef, conv_impl=conv_impl)
+                weights=w, conv_impl=conv_impl)
             _accumulate_param_grads(acc, g.path, contrib)
 
     gsum = _grads_to_tree(acc)
@@ -395,7 +602,7 @@ def planned_clipped_sum(apply_fn, params, batch, plan, *, l2_clip: float,
         missing = check_coverage(params, gsum)
         if missing:
             raise ValueError(f"auto missing param contribs: {missing}")
-    return losses, gsum, total
+    return losses, gsum, total, detail
 
 
 def per_example_grads(apply_fn, params, batch, strategy: str = "crb", **kw):

@@ -59,9 +59,14 @@ TAP_KEY = "__tap__"
 
 
 class PipelineStats:
-    """Counters for forwards / backwards / probes through a model."""
+    """Counters for forwards / backwards / probes through a model.
 
-    __slots__ = ("forwards", "backwards", "probes")
+    ``fused`` additionally counts fused norm+contrib realizations
+    (``gram_norm_fused``-backed single passes picked by stale-coefficient
+    plans); it is not part of :meth:`snapshot`, which covers only the
+    whole-model pass counters."""
+
+    __slots__ = ("forwards", "backwards", "probes", "fused")
 
     def __init__(self):
         self.reset()
@@ -70,6 +75,7 @@ class PipelineStats:
         self.forwards = 0
         self.backwards = 0
         self.probes = 0
+        self.fused = 0
 
     def snapshot(self) -> dict:
         return {"forwards": self.forwards, "backwards": self.backwards,

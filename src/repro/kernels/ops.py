@@ -35,9 +35,18 @@ def gram_norm(x, dy, *, has_bias: bool = False, bt: int = 256):
 
 
 def gram_norm_fused(x, dy, w, *, has_bias: bool = False, bt: int = 256):
-    """Fused ghost-norm + weighted contribution (see gram_norm.py)."""
-    return _gn.gram_norm_fused(x, dy, w, has_bias=has_bias, bt=bt,
-                               interpret=not on_tpu())
+    """Fused ghost-norm + weighted contribution (see gram_norm.py).
+
+    On TPU the Pallas kernel keeps the Gram tiles and the contribution
+    accumulator VMEM-resident (one HBM read of x/δy serves both
+    outputs); elsewhere the pure-jnp reference realizes the same
+    contract — the interpreter would dominate any wall-clock the fused
+    path is supposed to save (kernel/ref agreement is pinned in
+    tests/test_kernels.py)."""
+    if on_tpu():
+        return _gn.gram_norm_fused(x, dy, w, has_bias=has_bias, bt=bt,
+                                   interpret=False)
+    return _ref.gram_norm_fused_ref(x, dy, w, has_bias=has_bias)
 
 
 def gram_norm_tokmask(ids, dy, *, bt: int = 256):

@@ -17,6 +17,28 @@ def gram_norm_ref(x, dy, *, has_bias: bool = False):
     return n
 
 
+def gram_norm_fused_ref(x, dy, w, *, has_bias: bool = False):
+    """Fused ghost-norm + weighted contribution:
+    (‖δy_bᵀx_b‖²_F [+ bias], Σ_b w_b·x_bᵀδy_b, Σ_b w_b·Σ_t δy_bt).
+
+    Matches the kernel's cost shape: the norm via the T×T Gram identity
+    (never materializing the (B, Din, Dout) per-example products — in
+    the Gram regime that materialization costs orders of magnitude more
+    FLOPs than the norm itself) and the contribution as one direct
+    (B·T)-row contraction."""
+    xf, gf = x.astype(jnp.float32), dy.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    sx = jnp.einsum("bti,bsi->bts", xf, xf)
+    sy = jnp.einsum("bto,bso->bts", gf, gf)
+    n = jnp.einsum("bts,bts->b", sx, sy)
+    c = jnp.einsum("b,bti,bto->io", wf, xf, gf)
+    cb = jnp.zeros((dy.shape[-1],), jnp.float32)
+    if has_bias:
+        n = n + jnp.sum(sy, axis=(1, 2))
+        cb = jnp.einsum("b,bto->o", wf, gf)
+    return n, c, cb
+
+
 def gram_norm_tokmask_ref(ids, dy):
     dyf = dy.astype(jnp.float32)
     sy = jnp.einsum("btd,bsd->bts", dyf, dyf)

@@ -31,7 +31,8 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config
-from repro.core import DPConfig, PrivacyAccountant, PrivacyEngine, costmodel
+from repro.core import (ClipPolicy, DPConfig, PrivacyAccountant,
+                        PrivacyEngine, costmodel)
 from repro.data import SyntheticImageDataset, SyntheticLMDataset
 from repro.models.registry import build_model
 from repro.optim import adamw_init, cosine_schedule
@@ -80,6 +81,16 @@ def main(argv=None):
     ap.add_argument("--strategy", default=None,
                     choices=[None, "naive", "multi", "crb", "ghost", "bk",
                              "auto"])
+    ap.add_argument("--clip-mode", default="flat",
+                    choices=["flat", "per_layer", "stale"],
+                    help="clipping policy: flat (exact, default), "
+                         "per_layer (per-layer budgets with sum C_l^2 = "
+                         "C^2), or stale (lagged coefficients; fused "
+                         "single-pass plan, 1 fwd + 1 bwd steady state)")
+    ap.add_argument("--clip-budgets", default="uniform",
+                    choices=["uniform", "auto"],
+                    help="per_layer budget split: uniform, or auto "
+                         "(tracked per-layer norm quantiles)")
     ap.add_argument("--microbatches", default=1,
                     type=lambda v: v if v == "auto" else int(v),
                     help="int, or 'auto' to derive from the plan's "
@@ -114,9 +125,18 @@ def main(argv=None):
     if args.layers:
         cfg = cfg.replace(n_layers=args.layers)
     model = build_model(cfg)
+    # Non-flat clip modes need a per-group coefficient flow: respect an
+    # explicit --strategy (DPConfig validates the combination), but only
+    # override the model's configured default when it would be invalid.
+    strategy = args.strategy or cfg.dp_strategy
+    if args.clip_mode != "flat" and args.strategy is None \
+            and strategy not in ("auto", "bk"):
+        strategy = "auto"
     dpc = DPConfig(l2_clip=args.clip, noise_multiplier=args.noise,
-                   strategy=args.strategy or cfg.dp_strategy,
-                   microbatches=args.microbatches, delta=args.delta)
+                   strategy=strategy,
+                   microbatches=args.microbatches, delta=args.delta,
+                   clipping=ClipPolicy(mode=args.clip_mode,
+                                       budgets=args.clip_budgets))
     batch_fn = make_batch_fn(cfg, args.batch, args.seq)
     n_data = 1 << 16
     acct = PrivacyAccountant(sampling_rate=args.batch / n_data,
@@ -179,9 +199,17 @@ def main(argv=None):
             dt = mon.stop(step)
             losses.append(float(loss))
             if step % 10 == 0 or step == args.steps - 1:
+                # Under stale clipping the honest "what did this step
+                # apply" metric is the lagged one; under per_layer the
+                # scalar is the mean over (layer, example) pairs of the
+                # per-layer fractions also present in aux.
+                if "clip_fraction_lagged" in aux:
+                    clip_msg = (f"clip_frac(lagged) "
+                                f"{float(aux['clip_fraction_lagged']):.2f}")
+                else:
+                    clip_msg = f"clip_frac {float(aux['clip_fraction']):.2f}"
                 print(f"step {step:4d} loss {float(loss):.4f} "
-                      f"clip_frac {float(aux['clip_fraction']):.2f} "
-                      f"{dt*1e3:.0f}ms"
+                      f"{clip_msg} {dt*1e3:.0f}ms"
                       + (f" [{engine.report()}]" if args.noise else ""))
             if ckpt and (step + 1) % args.ckpt_every == 0:
                 ckpt.save_async(step, (params, opt))

@@ -21,7 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from conftest import true_norms_sq
-from repro.core import clipped_grad_sum, ghost_norms
+from repro.core import (ClipPolicy, clipped_grad_sum,
+                        clipped_grad_sum_detailed, ghost_norms,
+                        resolve_budgets)
 from repro.core.strategies import clip_coefficients
 from repro.core.tapper import Tapper
 
@@ -82,6 +84,49 @@ def _assert_clipped_sum_matches(apply_fn, params, batch, dtype, C=0.1,
         np.testing.assert_allclose(
             np.asarray(g, np.float32), np.asarray(w, np.float32),
             **_sum_tol(dtype, scale))
+
+
+def _group_pe(pe_grads):
+    """Split oracle per-example grads by top-level parameter group, in
+    sorted-key order — the same deterministic group order the pipeline's
+    budgets and per-layer norms use."""
+    return [(k, pe_grads[k]) for k in sorted(pe_grads)]
+
+
+def _oracle_per_layer_clipped_sum(apply_fn, params, batch, C,
+                                  budgets=None):
+    """Per-layer Jacobian-clip oracle: each parameter group clipped
+    against its own budget and its own (naive-Jacobian) norm."""
+    pe = oracle_pe_grads(apply_fn, params, batch)
+    groups = _group_pe(pe)
+    if budgets is None:
+        budgets = np.full(len(groups), C / np.sqrt(len(groups)))
+    out = {}
+    for (key, sub), b in zip(groups, np.asarray(budgets)):
+        coef = clip_coefficients(true_norms_sq(sub), b)
+        out[key] = jax.tree.map(
+            lambda g: jnp.einsum("b...,b->...", g.astype(jnp.float32), coef),
+            sub)
+    return out
+
+
+def _assert_per_layer_matches(apply_fn, params, batch, dtype, C=0.1,
+                              strategy="bk", **kw):
+    want = _oracle_per_layer_clipped_sum(apply_fn, params, batch, C)
+    _, got, _, detail = clipped_grad_sum_detailed(
+        apply_fn, params, batch, l2_clip=C,
+        strategy=strategy, clip_policy=ClipPolicy(mode="per_layer"),
+        check=(strategy == "auto"), **kw)
+    scale = max(max(float(jnp.abs(w).max())
+                    for w in jax.tree.leaves(want)), 1.0)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(
+            np.asarray(g, np.float32), np.asarray(w, np.float32),
+            **_sum_tol(dtype, scale))
+    # The budgets the pipeline resolved must satisfy the sensitivity
+    # invariant the oracle assumed.
+    np.testing.assert_allclose(
+        float(jnp.sum(jnp.square(detail["budgets"]))), C * C, rtol=1e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -296,6 +341,233 @@ def test_scale_clipped_sum_matches_oracle(dtype):
 
 
 # ---------------------------------------------------------------------------
+# Clipping modes: per-layer Jacobian-clip oracle and exactly-as-specified
+# stale semantics, for every norm realization.  Per-layer clipping on a
+# one-group model degenerates to flat (C_1 = C), so each kind-under-test
+# is paired with a dense head — two parameter groups, two budgets.
+
+
+def _head_loss(tp, p, feat):
+    o = tp.dense("head", feat, p["head"]["w"])
+    return jnp.sum(jnp.tanh(o.astype(jnp.float32)) ** 2, axis=1)
+
+
+def _head_params(rng, Din, dtype, Do=3):
+    return {"w": jnp.asarray(rng.randn(Din, Do), dtype) * 0.4}
+
+
+def dense_plus_head_model(dtype, B=3, T=6, Di=5, Do=4, seed=10):
+    rng = np.random.RandomState(seed)
+    params = {"fc": {"w": jnp.asarray(rng.randn(Di, Do), dtype) * 0.5,
+                     "b": jnp.asarray(rng.randn(Do), dtype) * 0.1},
+              "head": _head_params(rng, Do, dtype)}
+
+    def apply_fn(p, batch, tp):
+        y = tp.dense("fc", batch["x"], p["fc"]["w"], p["fc"]["b"])
+        return _head_loss(tp, p, jnp.tanh(y.astype(jnp.float32)).mean(1))
+
+    return apply_fn, params, {"x": jnp.asarray(rng.randn(B, T, Di), dtype)}
+
+
+def seg_dense_plus_head_model(dtype, B=4, E=3, S=5, Di=4, Do=3, seed=11):
+    rng = np.random.RandomState(seed)
+    params = {"ex": {"w": jnp.asarray(rng.randn(E, Di, Do), dtype) * 0.5},
+              "head": _head_params(rng, Di, dtype)}
+    seg = jnp.asarray(rng.randint(0, B, (E, S)))
+
+    def apply_fn(p, batch, tp):
+        y = tp.dense_segmented("ex", batch["x"], p["ex"]["w"], batch["seg"],
+                               n_examples=B)
+        v = jnp.sum(jnp.tanh(y.astype(jnp.float32)) ** 2, axis=-1)
+        seg_loss = jnp.zeros((B,), jnp.float32).at[
+            batch["seg"].reshape(-1)].add(v.reshape(-1))
+        return seg_loss + _head_loss(tp, p, batch["h"])
+
+    batch = {"x": jnp.asarray(rng.randn(E, S, Di), dtype), "seg": seg,
+             "h": jnp.asarray(rng.randn(B, Di), dtype)}
+    return apply_fn, params, batch
+
+
+def embed_plus_head_model(dtype, B=3, T=7, V=13, D=4, seed=12):
+    rng = np.random.RandomState(seed)
+    params = {"emb": {"emb": jnp.asarray(rng.randn(V, D), dtype) * 0.5},
+              "head": _head_params(rng, D, dtype)}
+
+    def apply_fn(p, batch, tp):
+        e = tp.embed("emb", p["emb"]["emb"], batch["ids"])
+        return _head_loss(tp, p, jnp.tanh(e.astype(jnp.float32)).mean(1))
+
+    return apply_fn, params, {"ids": jnp.asarray(rng.randint(0, V, (B, T)))}
+
+
+def conv_plus_head_model(dtype, geom, B=3, seed=13):
+    C, D, HW, K, s, p_, dil, g = geom
+    rng = np.random.RandomState(seed)
+    params = {"c": {"w": jnp.asarray(rng.randn(D, C // g, K, K), dtype) * 0.3,
+                    "b": jnp.asarray(rng.randn(D), dtype) * 0.1},
+              "head": _head_params(rng, D, dtype)}
+
+    def apply_fn(p, batch, tp):
+        y = tp.conv("c", batch["x"], p["c"]["w"], p["c"]["b"], stride=s,
+                    padding=p_, dilation=dil, groups=g)
+        return _head_loss(
+            tp, p, jnp.tanh(y.astype(jnp.float32)).mean(axis=(2, 3)))
+
+    return apply_fn, params, {"x": jnp.asarray(rng.randn(B, C, HW, HW),
+                                               dtype)}
+
+
+def scale_plus_head_model(dtype, B=4, T=5, D=6, seed=14):
+    rng = np.random.RandomState(seed)
+    params = {"s": {"g": jnp.asarray(1 + 0.3 * rng.randn(D), dtype),
+                    "b": jnp.asarray(rng.randn(D), dtype) * 0.1},
+              "head": _head_params(rng, D, dtype)}
+
+    def apply_fn(p, batch, tp):
+        y = tp.scale("s", batch["x"], p["s"]["g"], p["s"]["b"])
+        return _head_loss(tp, p, jnp.tanh(y.astype(jnp.float32)).mean(1))
+
+    return apply_fn, params, {"x": jnp.asarray(rng.randn(B, T, D), dtype)}
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("method", ("gram", "stream", "rank1"))
+def test_per_layer_dense_matches_oracle(method, dtype):
+    # rank1 needs no sequence axis: mean-pool the input first.
+    T = 1 if method == "rank1" else 6
+    apply_fn, params, batch = dense_plus_head_model(dtype, T=T)
+    _assert_per_layer_matches(apply_fn, params, batch, dtype,
+                              norm_method=method)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("method", ("gram", "stream"))
+def test_per_layer_seg_dense_matches_oracle(method, dtype):
+    apply_fn, params, batch = seg_dense_plus_head_model(dtype)
+    _assert_per_layer_matches(apply_fn, params, batch, dtype,
+                              norm_method=method)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("method", ("segsum", "gram", "pe"))
+def test_per_layer_embed_matches_oracle(method, dtype):
+    apply_fn, params, batch = embed_plus_head_model(dtype)
+    _assert_per_layer_matches(apply_fn, params, batch, dtype,
+                              embed_method=method)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("method", ("ghost", "pe"))
+@pytest.mark.parametrize("geom", (CONV_GEOMS[0], CONV_GEOMS[4]),
+                         ids=("vanilla", "mixed"))
+def test_per_layer_conv_matches_oracle(geom, method, dtype):
+    apply_fn, params, batch = conv_plus_head_model(dtype, geom)
+    _assert_per_layer_matches(apply_fn, params, batch, dtype,
+                              conv_norm=method)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_per_layer_scale_matches_oracle(dtype):
+    apply_fn, params, batch = scale_plus_head_model(dtype)
+    _assert_per_layer_matches(apply_fn, params, batch, dtype)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("build", (dense_plus_head_model,
+                                   embed_plus_head_model,
+                                   scale_plus_head_model),
+                         ids=("dense", "embed", "scale"))
+def test_per_layer_planned_matches_oracle(build, dtype):
+    """The planned (auto) pipeline under per-layer clipping, with the
+    planner choosing realizations."""
+    apply_fn, params, batch = build(dtype)
+    _assert_per_layer_matches(apply_fn, params, batch, dtype,
+                              strategy="auto")
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_per_layer_weighted_budgets_match_oracle(dtype):
+    """A non-uniform {glob: weight} split: the oracle clips with the same
+    resolved budgets the pipeline uses."""
+    apply_fn, params, batch = conv_plus_head_model(dtype, CONV_GEOMS[0])
+    C = 0.1
+    policy = ClipPolicy(mode="per_layer", budgets={"c": 3.0, "head": 1.0})
+    budgets = resolve_budgets(policy, C, ("c", "head"))
+    want = _oracle_per_layer_clipped_sum(apply_fn, params, batch, C,
+                                         budgets=np.asarray(budgets))
+    _, got, _, _ = clipped_grad_sum_detailed(
+        apply_fn, params, batch, l2_clip=C, strategy="auto",
+        clip_policy=policy, check=True)
+    scale = max(max(float(jnp.abs(w).max())
+                    for w in jax.tree.leaves(want)), 1.0)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(
+            np.asarray(g, np.float32), np.asarray(w, np.float32),
+            **_sum_tol(dtype, scale))
+
+
+STALE_BUILDERS = (
+    ("dense", dense_plus_head_model),
+    ("seg_dense", seg_dense_plus_head_model),
+    ("embed", embed_plus_head_model),
+    ("conv", lambda dtype: conv_plus_head_model(dtype, CONV_GEOMS[4])),
+    ("scale", scale_plus_head_model),
+)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("build", [b for _, b in STALE_BUILDERS],
+                         ids=[n for n, _ in STALE_BUILDERS])
+def test_stale_bitwise_reproduces_flat(build, dtype):
+    """Exactly-as-specified-stale: fed the previous step's norms (here:
+    the flat run's own norms on the same batch), a stale step with the
+    fused realizations disabled is *bitwise* the flat step — same
+    computation, lagged coefficients — and returns bitwise the same
+    current norms for the next step."""
+    apply_fn, params, batch = build(dtype)
+    C = 0.1
+    _, want, prev_ns, _ = clipped_grad_sum_detailed(
+        apply_fn, params, batch, l2_clip=C, strategy="auto")
+    _, got, cur_ns, _ = clipped_grad_sum_detailed(
+        apply_fn, params, batch, l2_clip=C, strategy="auto",
+        clip_policy=ClipPolicy(mode="stale", fused=False),
+        prev_norms_sq=prev_ns)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert g.dtype == w.dtype and bool(jnp.all(g == w)), \
+            "stale(fused=False) must be bitwise the flat result"
+    assert bool(jnp.all(cur_ns == prev_ns))
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("build", [b for _, b in STALE_BUILDERS],
+                         ids=[n for n, _ in STALE_BUILDERS])
+def test_stale_fused_matches_oracle(build, dtype):
+    """The fused single-pass realizations (gram_norm_fused where the plan
+    marks them) reproduce the oracle's clipped sum when fed the oracle's
+    norms — same tolerance bar as every other realization."""
+    apply_fn, params, batch = build(dtype)
+    C = 0.1
+    pe = oracle_pe_grads(apply_fn, params, batch)
+    prev_ns = true_norms_sq(pe)
+    coef = clip_coefficients(prev_ns, C)
+    want = jax.tree.map(
+        lambda g: jnp.einsum("b...,b->...", g.astype(jnp.float32), coef), pe)
+    _, got, cur_ns, _ = clipped_grad_sum_detailed(
+        apply_fn, params, batch, l2_clip=C, strategy="auto",
+        clip_policy=ClipPolicy(mode="stale", fused=True),
+        prev_norms_sq=jnp.asarray(prev_ns))
+    scale = max(max(float(jnp.abs(w).max())
+                    for w in jax.tree.leaves(want)), 1.0)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(
+            np.asarray(g, np.float32), np.asarray(w, np.float32),
+            **_sum_tol(dtype, scale))
+    # the pass's own norms (next step's coefficients) stay oracle-exact
+    np.testing.assert_allclose(np.asarray(cur_ns), np.asarray(prev_ns),
+                               **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
 # Hypothesis-driven geometry sweeps (CI installs requirements-dev.txt)
 
 
@@ -327,6 +599,35 @@ if HAVE_HYPOTHESIS:
                                               D=D, seed=seed)
         _assert_norms_match(apply_fn, params, batch, jnp.float32,
                             embed_method=method)
+
+    @given(st.integers(2, 10), st.integers(2, 8), st.integers(2, 8),
+           st.integers(0, 99), st.sampled_from(["gram", "stream"]))
+    def test_per_layer_dense_property(T, Di, Do, seed, method):
+        apply_fn, params, batch = dense_plus_head_model(
+            jnp.float32, B=3, T=T, Di=Di, Do=Do, seed=seed)
+        _assert_per_layer_matches(apply_fn, params, batch, jnp.float32,
+                                  norm_method=method)
+
+    @given(st.integers(1, 2), st.integers(1, 2), st.sampled_from([1, 2]),
+           st.integers(0, 99))
+    def test_stale_fused_conv_property(stride, dilation, groups, seed):
+        C_in = 4 * groups
+        D = 2 * groups
+        geom = (C_in, D, 8, 3, stride, 1, dilation, groups)
+        apply_fn, params, batch = conv_plus_head_model(jnp.float32, geom,
+                                                       seed=seed)
+        _, want, prev_ns, _ = clipped_grad_sum_detailed(
+            apply_fn, params, batch, l2_clip=0.1, strategy="auto")
+        _, got, _, _ = clipped_grad_sum_detailed(
+            apply_fn, params, batch, l2_clip=0.1, strategy="auto",
+            clip_policy=ClipPolicy(mode="stale", fused=True),
+            prev_norms_sq=prev_ns)
+        scale = max(max(float(jnp.abs(w).max())
+                        for w in jax.tree.leaves(want)), 1.0)
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(
+                np.asarray(g, np.float32), np.asarray(w, np.float32),
+                **_sum_tol(jnp.float32, scale))
 
 
 # ---------------------------------------------------------------------------
@@ -366,3 +667,73 @@ def test_sharded_engine_passes_oracle(dtype):
         np.testing.assert_allclose(np.asarray(g, np.float32),
                                    np.asarray(w, np.float32),
                                    **_sum_tol(dtype, scale))
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8")
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_sharded_per_layer_passes_oracle(dtype):
+    """Per-layer clipping under the explicitly sharded step: per-layer
+    per-example norms reduce over the data axes under SPMD (each group's
+    coefficients see the psum'd group norm) and the result matches the
+    per-layer Jacobian-clip oracle."""
+    from repro.core import ClipPolicy, DPConfig, PrivacyEngine
+
+    apply_fn, params, batch = conv_plus_head_model(dtype, CONV_GEOMS[1],
+                                                   B=8, seed=7)
+    mesh = jax.make_mesh((8,), ("data",))
+    C = 0.1
+    engine = PrivacyEngine(
+        apply_fn, params, batch,
+        dp=DPConfig(l2_clip=C, clipping=ClipPolicy(mode="per_layer")),
+        optimizer=_grad_extracting_optimizer, mesh=mesh)
+    got_grad, _, _, aux = engine.private_step(
+        params, {"step": jnp.zeros(())}, batch)
+    B = batch["x"].shape[0]
+    want = _oracle_per_layer_clipped_sum(apply_fn, params, batch, C)
+    want_grad = jax.tree.map(lambda g: g / B, want)
+    assert aux["per_layer_clip_fraction"].shape == (2,)
+    scale = max(max(float(jnp.abs(w).max())
+                    for w in jax.tree.leaves(want_grad)), 1e-3)
+    for g, w in zip(jax.tree.leaves(got_grad), jax.tree.leaves(want_grad)):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   **_sum_tol(dtype, scale))
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8")
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_sharded_stale_passes_oracle(dtype):
+    """Stale clipping under the sharded step: the bootstrap step clips
+    exactly (flat oracle), and the steady step — fed the bootstrap's
+    norms on the same batch — reproduces the flat oracle too (the lagged
+    norms coincide with the current ones)."""
+    from repro.core import ClipPolicy, DPConfig, PrivacyEngine
+
+    apply_fn, params, batch = conv_plus_head_model(dtype, CONV_GEOMS[1],
+                                                   B=8, seed=7)
+    mesh = jax.make_mesh((8,), ("data",))
+    C = 0.1
+    engine = PrivacyEngine(
+        apply_fn, params, batch,
+        dp=DPConfig(l2_clip=C, clipping=ClipPolicy(mode="stale")),
+        optimizer=_grad_extracting_optimizer, mesh=mesh)
+    opt0 = {"step": jnp.zeros(())}
+    B = batch["x"].shape[0]
+    want = _oracle_clipped_sum(apply_fn, params, batch, C)
+    want_grad = jax.tree.map(lambda g: g / B, want)
+    scale = max(max(float(jnp.abs(w).max())
+                    for w in jax.tree.leaves(want_grad)), 1e-3)
+    boot_grad, _, _, aux = engine.private_step(params, opt0, batch)
+    steady_grad, _, _, aux2 = engine.private_step(params, opt0, batch)
+    assert "clip_fraction_lagged" in aux and "clip_fraction_lagged" in aux2
+    for got in (boot_grad, steady_grad):
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want_grad)):
+            np.testing.assert_allclose(np.asarray(g, np.float32),
+                                       np.asarray(w, np.float32),
+                                       **_sum_tol(dtype, scale))

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attn import flash_attention
-from repro.kernels.gram_norm import gram_norm, gram_norm_tokmask
+from repro.kernels.gram_norm import (gram_norm, gram_norm_fused,
+                                     gram_norm_tokmask)
 from repro.kernels.pe_conv_grad import pe_conv_grad_1d, pe_conv_grad_2d
 
 
@@ -25,6 +26,30 @@ def test_gram_norm(shape, dtype, has_bias):
     want = ref.gram_norm_ref(x, dy, has_bias=has_bias)
     rtol = 2e-5 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol)
+
+
+@pytest.mark.parametrize("shape", [(3, 50, 16, 24), (2, 130, 7, 5),
+                                   (1, 8, 32, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("has_bias", [False, True])
+def test_gram_norm_fused_kernel_vs_ref(shape, dtype, has_bias):
+    """The fused norm+contrib kernel body (interpret mode) against the
+    jnp reference that serves as the CPU dispatch of ops.gram_norm_fused
+    — both outputs, plus the bias contribution when present."""
+    B, T, Di, Do = shape
+    rng = np.random.RandomState(sum(shape))
+    x = jnp.array(rng.randn(B, T, Di), dtype)
+    dy = jnp.array(rng.randn(B, T, Do), dtype)
+    w = jnp.array(rng.rand(B), jnp.float32)
+    n_k, c_k, cb_k = gram_norm_fused(x, dy, w, has_bias=has_bias, bt=64,
+                                     interpret=True)
+    n_r, c_r, cb_r = ref.gram_norm_fused_ref(x, dy, w, has_bias=has_bias)
+    rtol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(n_k), np.asarray(n_r), rtol=rtol)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r), rtol=rtol,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cb_k), np.asarray(cb_r),
+                               rtol=rtol, atol=1e-5)
 
 
 @pytest.mark.parametrize("bt", [8, 16, 64])

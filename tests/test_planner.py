@@ -301,8 +301,8 @@ def test_executor_backward_sum_phase_exact(toy_model):
                                  strategy="naive")
     STATS.reset()
     from repro.core.strategies import planned_clipped_sum
-    _, got, _ = planned_clipped_sum(apply_fn, params, batch, forced,
-                                    l2_clip=C, check=True)
+    _, got, _, _ = planned_clipped_sum(apply_fn, params, batch, forced,
+                                       l2_clip=C, check=True)
     assert STATS.forwards == 2 and STATS.backwards == 2
     assert tree_maxdiff(got, ref) < TOL
 
@@ -333,8 +333,8 @@ def test_planner_cumulative_stash_budget(toy_model):
     C = 0.05
     _, ref, _ = clipped_grad_sum(apply_fn, params, batch, l2_clip=C,
                                  strategy="naive")
-    _, got, _ = planned_clipped_sum(apply_fn, params, batch, plan_small,
-                                    l2_clip=C, check=True)
+    _, got, _, _ = planned_clipped_sum(apply_fn, params, batch, plan_small,
+                                       l2_clip=C, check=True)
     assert tree_maxdiff(got, ref) < TOL
 
 
