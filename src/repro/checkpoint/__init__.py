@@ -1,3 +1,4 @@
-from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.checkpointer import (Checkpointer, CheckpointCorrupt,
+                                           DPTrainState)
 
-__all__ = ["Checkpointer"]
+__all__ = ["Checkpointer", "CheckpointCorrupt", "DPTrainState"]

@@ -5,12 +5,27 @@ Layout per step::
     <dir>/step_000123/
         manifest.json      # step, leaf paths, shapes/dtypes, crc32
         arrays.npz         # one entry per flattened pytree leaf
+        meta.json          # optional JSON sidecar (CRC'd via the manifest)
     <dir>/LATEST           # atomically-updated pointer
 
 Writes go to ``step_X.tmp`` then ``os.rename`` (atomic on POSIX) so a
 crash mid-write can never corrupt the restore point — the fault-tolerance
 contract the runtime layer relies on.  ``save_async`` runs serialization
 in a background thread (double-buffered: at most one outstanding save).
+
+Restore verifies every leaf's CRC32 (and the meta sidecar's) and raises
+the named :class:`CheckpointCorrupt` on any mismatch, truncation, or
+missing entry; with ``fallback=True`` a corrupt step is skipped (loudly,
+via the logger) and the previous keep-k checkpoint is tried instead, so
+one bad write never strands a run.
+
+:class:`DPTrainState` is the unit of DP-training persistence: params and
+optimizer state, the cross-step clipping state (stale coefficients,
+auto-budget quantiles), the privacy accountant ledger, the plan
+fingerprint, the monitor state, and the noise-stream seed.  A restart
+that restores all of it — and replays the deterministic noise stream —
+is bit-identical to a run that never died (tests/test_resume_equivalence
+is the differential proof).
 
 On a multi-host cluster each host would write only its addressable shards
 (same manifest schema, one arrays file per host); restore then reassembles
@@ -20,19 +35,64 @@ smaller/larger mesh reshards automatically.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
+import logging
 import os
 import shutil
 import threading
+import zipfile
 import zlib
+from typing import Any
 
 import jax
 import numpy as np
+
+log = logging.getLogger("repro.checkpoint")
+
+
+class CheckpointCorrupt(IOError):
+    """A checkpoint failed CRC verification or cannot be read at all
+    (truncated arrays file, missing leaves, unparseable manifest/meta)."""
+
+
+@dataclasses.dataclass
+class DPTrainState:
+    """Everything a DP training step stream needs to resume bit-exactly.
+
+    ``clip_state`` holds the engine's cross-step clipping arrays (any of
+    ``prev_norms_sq`` / ``budgets`` / ``budget_q``); ``ledger`` is the
+    accountant's ``state_dict()``; ``plan_fingerprint`` pins the ExecPlan
+    (mesh included) the checkpoint was produced under so a resume can
+    distinguish "same plan" from "elastic re-plan" from "model changed";
+    ``run_seed`` pins the deterministic noise stream."""
+
+    params: Any
+    opt: Any
+    clip_state: dict = dataclasses.field(default_factory=dict)
+    ledger: dict | None = None
+    plan_fingerprint: str = ""
+    monitor: dict | None = None
+    run_seed: int | None = None
+    mesh_axes: tuple = ()
+
+
+class _AnyLeaf:
+    """Restore-verbatim placeholder for leaves whose shape/dtype only the
+    checkpoint knows (the clip-state arrays)."""
 
 
 def _flatten(tree):
     leaves = jax.tree_util.tree_leaves_with_path(tree)
     return {jax.tree_util.keystr(kp): np.asarray(v) for kp, v in leaves}
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _meta_bytes(meta: dict) -> bytes:
+    return json.dumps(meta, sort_keys=True).encode()
 
 
 class Checkpointer:
@@ -43,8 +103,8 @@ class Checkpointer:
         self._thread: threading.Thread | None = None
 
     # -- save ------------------------------------------------------------
-    def save(self, step: int, tree) -> str:
-        flat = _flatten(tree)
+    def save(self, step: int, tree, *, meta: dict | None = None) -> str:
+        flat = {k: v for k, v in _flatten(tree).items()}
         name = f"step_{step:09d}"
         tmp = os.path.join(self.dir, name + ".tmp")
         final = os.path.join(self.dir, name)
@@ -53,10 +113,14 @@ class Checkpointer:
         manifest = {
             "step": step,
             "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
-                           "crc32": zlib.crc32(np.ascontiguousarray(v)
-                                               .tobytes()) & 0xFFFFFFFF}
+                           "crc32": _crc(v)}
                        for k, v in flat.items()},
         }
+        if meta is not None:
+            mb = _meta_bytes(meta)
+            with open(os.path.join(tmp, "meta.json"), "wb") as f:
+                f.write(mb)
+            manifest["meta_crc32"] = zlib.crc32(mb) & 0xFFFFFFFF
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
@@ -69,12 +133,33 @@ class Checkpointer:
         self._gc()
         return final
 
-    def save_async(self, step: int, tree):
+    def save_async(self, step: int, tree, *, meta: dict | None = None):
         self.wait()
         host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
         self._thread = threading.Thread(target=self.save,
-                                        args=(step, host_tree), daemon=True)
+                                        args=(step, host_tree),
+                                        kwargs={"meta": meta}, daemon=True)
         self._thread.start()
+
+    def save_state(self, step: int, state: DPTrainState) -> str:
+        tree, meta = self._state_payload(state)
+        return self.save(step, tree, meta=meta)
+
+    def save_state_async(self, step: int, state: DPTrainState):
+        tree, meta = self._state_payload(state)
+        self.save_async(step, tree, meta=meta)
+
+    def _state_payload(self, state: DPTrainState):
+        clip = {k: np.asarray(v) for k, v in (state.clip_state or {}).items()
+                if v is not None}
+        tree = {"params": state.params, "opt": state.opt, "clip": clip}
+        meta = {"ledger": state.ledger,
+                "plan_fingerprint": state.plan_fingerprint,
+                "monitor": state.monitor,
+                "run_seed": state.run_seed,
+                "mesh_axes": [[n, int(s)] for n, s in state.mesh_axes],
+                "clip_keys": sorted(clip)}
+        return tree, meta
 
     def wait(self):
         if self._thread is not None:
@@ -97,30 +182,149 @@ class Checkpointer:
             return None
         return int(name.split("_")[1])
 
-    def restore(self, like_tree, step: int | None = None, *,
-                shardings=None, verify: bool = True):
-        """Restore into the structure of ``like_tree``; optionally place
-        onto ``shardings`` (elastic re-mesh: any mesh works)."""
+    def available_steps(self) -> list[int]:
+        """All completed checkpoint steps, newest first (from the atomic
+        directory listing, not the LATEST pointer, so a crash between the
+        two renames still sees the newest completed step)."""
+        steps = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    steps.append(int(d.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(steps, reverse=True)
+
+    def _candidates(self, step: int | None, fallback: bool) -> list[int]:
+        if step is not None:
+            return [step]
+        steps = self.available_steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        return steps if fallback else steps[:1]
+
+    def _load_manifest(self, d: str) -> dict:
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                return json.load(f)
+        except (OSError, ValueError) as e:
+            raise CheckpointCorrupt(f"unreadable manifest in {d}: {e}") \
+                from e
+
+    def read_meta(self, step: int | None = None) -> dict | None:
+        """The CRC-verified meta sidecar of a checkpoint (None if the
+        checkpoint was written without one)."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {self.dir}")
         d = os.path.join(self.dir, f"step_{step:09d}")
-        manifest = json.load(open(os.path.join(d, "manifest.json")))
-        data = np.load(os.path.join(d, "arrays.npz"))
-        if verify:
-            for k, meta in manifest["leaves"].items():
-                crc = zlib.crc32(np.ascontiguousarray(data[k]).tobytes()) \
-                    & 0xFFFFFFFF
-                if crc != meta["crc32"]:
-                    raise IOError(f"checkpoint corruption in {k}")
-        leaves = jax.tree_util.tree_leaves_with_path(like_tree)
-        out = []
-        for kp, leaf in leaves:
-            arr = data[jax.tree_util.keystr(kp)]
-            out.append(np.asarray(arr).astype(leaf.dtype)
-                       if hasattr(leaf, "dtype") else arr)
+        return self._read_meta_dir(d, self._load_manifest(d))
+
+    def _read_meta_dir(self, d: str, manifest: dict) -> dict | None:
+        if "meta_crc32" not in manifest:
+            return None
+        try:
+            with open(os.path.join(d, "meta.json"), "rb") as f:
+                mb = f.read()
+        except OSError as e:
+            raise CheckpointCorrupt(f"missing meta.json in {d}: {e}") from e
+        if (zlib.crc32(mb) & 0xFFFFFFFF) != manifest["meta_crc32"]:
+            raise CheckpointCorrupt(f"meta.json CRC mismatch in {d}")
+        try:
+            return json.loads(mb)
+        except ValueError as e:
+            raise CheckpointCorrupt(f"unparseable meta.json in {d}: {e}") \
+                from e
+
+    def _restore_dir(self, step: int, like_tree, *, shardings=None,
+                     verify: bool = True):
+        """Restore one checkpoint directory or raise CheckpointCorrupt."""
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        if not os.path.isdir(d):
+            raise FileNotFoundError(f"no checkpoint for step {step} in "
+                                    f"{self.dir}")
+        manifest = self._load_manifest(d)
+        try:
+            data = np.load(os.path.join(d, "arrays.npz"))
+            if verify:
+                for k, m in manifest["leaves"].items():
+                    if _crc(data[k]) != m["crc32"]:
+                        raise CheckpointCorrupt(
+                            f"checkpoint corruption in {k} (step {step}): "
+                            f"CRC mismatch")
+            leaves = jax.tree_util.tree_leaves_with_path(like_tree)
+            out = []
+            for kp, leaf in leaves:
+                arr = data[jax.tree_util.keystr(kp)]
+                out.append(np.asarray(arr).astype(leaf.dtype)
+                           if hasattr(leaf, "dtype") else np.asarray(arr))
+        except CheckpointCorrupt:
+            raise
+        except (OSError, KeyError, ValueError, zlib.error,
+                zipfile.BadZipFile) as e:
+            # truncated zip, missing member, undecodable payload — all the
+            # shapes a torn write takes
+            raise CheckpointCorrupt(
+                f"unreadable checkpoint step {step}: "
+                f"{type(e).__name__}: {e}") from e
         tree = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(like_tree), out)
         if shardings is not None:
             tree = jax.tree.map(jax.device_put, tree, shardings)
-        return tree, manifest["step"]
+        return tree
+
+    def restore(self, like_tree, step: int | None = None, *,
+                shardings=None, verify: bool = True,
+                fallback: bool = False):
+        """Restore into the structure of ``like_tree``; optionally place
+        onto ``shardings`` (elastic re-mesh: any mesh works).  CRC failure
+        raises :class:`CheckpointCorrupt`; ``fallback=True`` skips corrupt
+        steps (with a logged warning) and tries the previous keep-k
+        checkpoint instead."""
+        last_err = None
+        for s in self._candidates(step, fallback):
+            try:
+                return self._restore_dir(s, like_tree, shardings=shardings,
+                                         verify=verify), s
+            except CheckpointCorrupt as e:
+                last_err = e
+                if not fallback:
+                    raise
+                log.warning("checkpoint step %d corrupt (%s); falling back "
+                            "to the previous checkpoint", s, e)
+        raise last_err
+
+    def restore_state(self, like_params, like_opt,
+                      step: int | None = None, *, shardings=None,
+                      fallback: bool = True):
+        """Restore a :class:`DPTrainState` (params/opt shaped like the
+        given trees; clip-state arrays restored verbatim from the
+        checkpoint).  Corrupt steps fall back to older checkpoints by
+        default — a restart should prefer losing a few steps of progress
+        to dying on a torn write.  Returns ``(state, step)``."""
+        last_err = None
+        for s in self._candidates(step, fallback):
+            d = os.path.join(self.dir, f"step_{s:09d}")
+            try:
+                meta = self._read_meta_dir(d, self._load_manifest(d)) or {}
+                like = {"params": like_params, "opt": like_opt,
+                        "clip": {k: _AnyLeaf()
+                                 for k in meta.get("clip_keys", ())}}
+                tree = self._restore_dir(s, like, shardings=shardings)
+            except CheckpointCorrupt as e:
+                last_err = e
+                if not fallback:
+                    raise
+                log.warning("checkpoint step %d corrupt (%s); falling back "
+                            "to the previous checkpoint", s, e)
+                continue
+            state = DPTrainState(
+                params=tree["params"], opt=tree["opt"],
+                clip_state=tree["clip"], ledger=meta.get("ledger"),
+                plan_fingerprint=meta.get("plan_fingerprint", ""),
+                monitor=meta.get("monitor"),
+                run_seed=meta.get("run_seed"),
+                mesh_axes=tuple((n, int(sz))
+                                for n, sz in meta.get("mesh_axes", ())))
+            return state, s
+        raise last_err

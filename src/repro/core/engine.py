@@ -95,6 +95,14 @@ class PrivacyEngine:
                   axes, params/opt/key replicated).  A mesh *spec*
                   (``"data:8"``, axes dict/tuple) plans for that topology
                   without requiring the devices (no sharded execution).
+      run_seed:   seed of the deterministic per-step noise stream: step
+                  ``n``'s noise key is ``fold_in(PRNGKey(run_seed), n)``
+                  (:meth:`noise_key`), a pure function of (run_seed, n)
+                  — so a killed-and-resumed run replays *exactly* the
+                  noise an uninterrupted run would have drawn, never a
+                  fresh draw (which would break the accounted mechanism).
+                  Pass ``step=`` to :meth:`private_step`/:meth:`noisy_grad`
+                  to use the stream.
     """
 
     def __init__(self, apply_fn: Callable, params, batch_spec,
@@ -103,7 +111,7 @@ class PrivacyEngine:
                  sampling_rate: float | None = None,
                  accountant: PrivacyAccountant | None = None,
                  plan: costmodel.ExecPlan | None = None,
-                 mesh=None):
+                 mesh=None, run_seed: int | None = None):
         self.apply_fn = apply_fn
         self.dp = dp if dp is not None else DPConfig()
         self._params_spec = _spec_of(params)
@@ -137,6 +145,9 @@ class PrivacyEngine:
                 fingerprint=self._fingerprint(),
                 clip_mode=self.dp.clipping.mode)
         self._plan = plan
+        self.run_seed = run_seed
+        self._run_key = (None if run_seed is None
+                         else jax.random.PRNGKey(run_seed))
         # Cross-step clipping state: stale mode's lagged norms, and the
         # per-layer "auto" budget split tracked from observed norm
         # quantiles.  Device arrays where possible (no host sync on the
@@ -154,6 +165,18 @@ class PrivacyEngine:
         return costmodel.plan_fingerprint(
             self.apply_fn, self._params_spec, self._batch_spec,
             **self._planner_opts())
+
+    def fingerprint(self, mesh=None) -> str:
+        """The plan fingerprint for this engine's (model, shapes, config)
+        — what a checkpoint pins.  ``mesh=`` re-keys it under a different
+        topology: the elastic-resume cross-check, distinguishing "this
+        checkpoint is the same run on another mesh" (re-plan and resume)
+        from "the model or planner config changed" (refuse)."""
+        if mesh is None:
+            return self._fingerprint()
+        opts = dict(self._planner_opts(), mesh=costmodel.mesh_axes(mesh))
+        return costmodel.plan_fingerprint(
+            self.apply_fn, self._params_spec, self._batch_spec, **opts)
 
     def plan(self) -> costmodel.ExecPlan:
         """The full-batch ExecPlan (built once; cache/store hits are free)."""
@@ -219,28 +242,80 @@ class PrivacyEngine:
 
     # -- execution ---------------------------------------------------------
 
-    def _check_key(self, key):
+    def noise_key(self, step: int):
+        """Step ``step``'s noise key: ``fold_in(PRNGKey(run_seed), step)``.
+        A pure function of (run_seed, step) — independent of how many
+        times the process died and resumed on the way to ``step`` — so
+        replayed steps re-add the *same* noise and the checkpointed
+        accountant ledger stays the truth (deterministic replay releases
+        nothing new)."""
+        if self._run_key is None:
+            raise ValueError(
+                "engine has no noise stream; construct with run_seed=")
+        return jax.random.key_data(jax.random.fold_in(self._run_key, step))
+
+    def _check_key(self, key, step=None):
+        if key is None and step is not None and self._run_key is not None:
+            return self.noise_key(step)
         if key is None:
             if self.dp.noise_multiplier > 0:
                 raise ValueError(
-                    "noise_multiplier > 0 requires a PRNG key per step")
+                    "noise_multiplier > 0 requires a PRNG key per step "
+                    "(or construct the engine with run_seed= and pass "
+                    "step=)")
             return jax.random.PRNGKey(0)
         return key
 
-    def noisy_grad(self, params, batch, key=None, denom: int | None = None):
+    def noisy_grad(self, params, batch, key=None, denom: int | None = None,
+                   *, step: int | None = None):
         """(mean loss, noised clipped mean gradient, aux).  Eager — safe to
         call under an outer ``jax.jit``; ``private_step`` is the pre-jitted
         all-in-one.  Cross-step clipping state (stale norms, auto budgets)
-        is threaded exactly as in ``private_step``."""
+        is threaded exactly as in ``private_step``.  ``step=`` draws the
+        noise from the deterministic stream (``run_seed`` engines)."""
         cfg = dataclasses.replace(self.dp, microbatches=self.microbatches())
         out = dp_gradient(self.apply_fn, params, batch, cfg=cfg,
-                          key=self._check_key(key), denom=denom,
+                          key=self._check_key(key, step), denom=denom,
                           plan=self._exec_plan(),
                           clip_state=self._clip_state())
         self._absorb_clip_aux(out[2])
         return out
 
     # -- cross-step clipping state ------------------------------------------
+
+    def clip_state_dict(self) -> dict:
+        """Host-side snapshot of the cross-step clipping state — the
+        stale lagged norms and the per-layer auto-budget split + tracked
+        quantiles.  This *must* ride in every checkpoint: a stale-mode
+        restart without ``prev_norms_sq`` would re-run the flat bootstrap
+        (different coefficients than the uninterrupted run), and an
+        auto-budget restart without ``budget_q`` would re-split the clip
+        budget from scratch — both silently change what the accounted
+        mechanism released."""
+        out = {}
+        if self._prev_norms_sq is not None:
+            out["prev_norms_sq"] = np.asarray(self._prev_norms_sq)
+        if self._budgets is not None:
+            out["budgets"] = np.asarray(self._budgets)
+        if self._budget_q is not None:
+            out["budget_q"] = np.asarray(self._budget_q)
+        return out
+
+    def load_clip_state(self, state: dict | None):
+        """Install a checkpointed :meth:`clip_state_dict` (missing keys
+        reset to empty — a flat-mode checkpoint carries none)."""
+        state = dict(state or {})
+        pn = state.get("prev_norms_sq")
+        self._prev_norms_sq = None if pn is None else jnp.asarray(pn)
+        b = state.get("budgets")
+        self._budgets = None if b is None else jnp.asarray(b)
+        q = state.get("budget_q")
+        self._budget_q = None if q is None else np.asarray(q, np.float64)
+
+    def reset_clip_state(self):
+        """Drop all cross-step clipping state (a from-scratch restart:
+        stale mode re-bootstraps, auto budgets re-track)."""
+        self.load_clip_state(None)
 
     def _clip_state(self) -> dict:
         """The clip_state dict for the next step.  Structure changes only
@@ -324,20 +399,23 @@ class PrivacyEngine:
         return jax.jit(step, in_shardings=(repl, repl, batch_sh, repl, repl),
                        out_shardings=repl)
 
-    def private_step(self, params, opt, batch, key=None):
+    def private_step(self, params, opt, batch, key=None, *,
+                     step: int | None = None):
         """One fused DP-SGD step: gradient + clip + noise + optimizer
         update in a single jitted closure over the plan, plus host-side
         accountant bookkeeping.  With a mesh the closure is jitted with
         explicit shardings (batch on the data axes; params, optimizer
         state, key, and outputs replicated).  Returns (params, opt, loss,
-        aux).
+        aux).  ``step=`` (with a ``run_seed`` engine) draws the noise
+        from the deterministic per-step stream instead of an explicit
+        key — the restart-safe way to drive the loop.
 
         Non-flat clipping modes thread state across steps: ``stale``
         feeds this step's norms to the next step's coefficients (the
         first step bootstraps with exact flat clipping); ``per_layer``
         with ``budgets="auto"`` re-splits the budget from the tracked
         per-layer norm quantiles after every step."""
-        out = self._jit_step(params, opt, batch, self._check_key(key),
+        out = self._jit_step(params, opt, batch, self._check_key(key, step),
                              self._clip_state())
         self._absorb_clip_aux(out[3])
         if self.accountant is not None:

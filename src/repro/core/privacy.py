@@ -87,8 +87,20 @@ def eps_from_rdp(rdp_total: np.ndarray, orders, delta: float) -> float:
     return float(np.min(eps))
 
 
+class LedgerMismatch(ValueError):
+    """A restored ledger describes a different mechanism (q, σ, orders)
+    than the live accountant — continuing would compose RDP curves of two
+    different mechanisms under one ε, silently corrupting the guarantee."""
+
+
 class PrivacyAccountant:
-    """Tracks composition over training steps."""
+    """Tracks composition over training steps.
+
+    The accountant's full state is its ledger — ``state_dict()`` /
+    ``load_state_dict()`` round-trip it through checkpoints so a restart
+    resumes the ε composition exactly where the checkpoint left it (the
+    replayed steps re-run the *same* deterministic mechanism outputs, so
+    they are not new releases and must not be double-counted)."""
 
     def __init__(self, sampling_rate: float, noise_multiplier: float,
                  orders=DEFAULT_ORDERS):
@@ -101,6 +113,45 @@ class PrivacyAccountant:
 
     def step(self, n: int = 1):
         self.steps += n
+
+    # -- ledger (de)serialization ---------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-able ledger: the composed step count plus the mechanism
+        parameters it was composed under (so a restore can refuse to graft
+        it onto a different mechanism)."""
+        return {"steps": int(self.steps), "q": self.q, "sigma": self.sigma,
+                "orders": [int(a) for a in self.orders]}
+
+    def load_state_dict(self, state: dict):
+        """Resume a checkpointed ledger.  Fails loudly (LedgerMismatch) if
+        the checkpoint was accounted under different mechanism parameters
+        — that is a privacy bug, not a resumable condition."""
+        for field, mine in (("q", self.q), ("sigma", self.sigma)):
+            theirs = float(state[field])
+            if theirs != mine:
+                raise LedgerMismatch(
+                    f"checkpointed ledger has {field}={theirs}, this "
+                    f"accountant runs {field}={mine}; refusing to resume "
+                    f"a ledger accounted under a different mechanism")
+        if "orders" in state and tuple(state["orders"]) != \
+                tuple(int(a) for a in self.orders):
+            raise LedgerMismatch(
+                "checkpointed ledger used different RDP orders; refusing "
+                "to resume (ε would be composed over mismatched curves)")
+        self.steps = int(state["steps"])
+
+    @classmethod
+    def from_state(cls, state: dict) -> "PrivacyAccountant":
+        acct = cls(sampling_rate=state["q"], noise_multiplier=state["sigma"],
+                   orders=tuple(state.get("orders", DEFAULT_ORDERS)))
+        acct.steps = int(state["steps"])
+        return acct
+
+    def reset(self):
+        """Back to zero composed steps (a from-scratch in-process restart
+        with no checkpoint to resume from)."""
+        self.steps = 0
 
     def epsilon(self, delta: float = 1e-5) -> float:
         if self.sigma <= 0:

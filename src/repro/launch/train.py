@@ -9,9 +9,19 @@ collective-bytes costs, topology-keyed fingerprint — the plan table gains
 a ``coll MB`` column) and runs the private step sharded over the data
 axes; on a CPU host the device count is forced to match before jax loads.
 
+Preemption safety: noise keys come from the engine's deterministic
+stream (``fold_in(PRNGKey(--run-seed), step)``), and checkpoints persist
+the full :class:`~repro.checkpoint.DPTrainState` — params, optimizer,
+cross-step clip state, the accountant ledger, the plan fingerprint, and
+the monitor — so a killed run resumes bit-identically (the differential
+proof lives in tests/test_resume_equivalence.py).  Resuming with fewer
+devices than the checkpoint's mesh re-plans automatically onto the
+surviving topology while the ledger and noise stream continue unbroken.
+``--chaos p`` drills the whole path with seeded per-step failures.
+
     PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
         --reduced --steps 50 --batch 8 --noise 0.8 --clip 1.0 \
-        --ckpt-dir /tmp/ckpt --fail-at 20 --mesh data:8
+        --ckpt-dir /tmp/ckpt --fail-at 20 --chaos 0.05 --mesh data:8
 """
 from __future__ import annotations
 
@@ -29,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import Checkpointer
+from repro.checkpoint import Checkpointer, DPTrainState
 from repro.configs import get_config
 from repro.core import (ClipPolicy, DPConfig, PrivacyAccountant,
                         PrivacyEngine, costmodel)
@@ -37,7 +47,7 @@ from repro.data import SyntheticImageDataset, SyntheticLMDataset
 from repro.models.registry import build_model
 from repro.optim import adamw_init, cosine_schedule
 from repro.runtime import ChaosMonkey, StepMonitor, WorkerFailure, \
-    run_with_restarts
+    elastic_mesh_axes, run_with_restarts
 
 
 def make_batch_fn(cfg, batch: int, seq: int):
@@ -108,6 +118,22 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--run-seed", type=int, default=0,
+                    help="seed of the deterministic noise stream: step "
+                         "n's noise key is fold_in(PRNGKey(run_seed), n), "
+                         "so a resumed run replays exactly the noise an "
+                         "uninterrupted run would draw")
+    ap.add_argument("--chaos", type=float, default=0.0,
+                    help="chaos drill: per-step failure probability "
+                         "(seeded via --chaos-seed, so drills replay)")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--max-restarts", type=int, default=5)
+    ap.add_argument("--restart-backoff", type=float, default=0.0,
+                    help="base seconds of the jittered exponential "
+                         "restart backoff")
+    ap.add_argument("--restart-window", type=float, default=None,
+                    help="budget --max-restarts over a sliding window of "
+                         "this many seconds instead of the whole run")
     ap.add_argument("--delta", type=float, default=1e-5)
     ap.add_argument("--d-model", type=int, default=0,
                     help="override reduced d_model (e.g. ~100M scale)")
@@ -141,15 +167,21 @@ def main(argv=None):
     n_data = 1 << 16
     acct = PrivacyAccountant(sampling_rate=args.batch / n_data,
                              noise_multiplier=args.noise)
-    chaos = ChaosMonkey(fail_at_steps=args.fail_at)
+    chaos = ChaosMonkey(fail_at_steps=args.fail_at, p=args.chaos,
+                        seed=args.chaos_seed)
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
     if args.plan_json and os.path.exists(args.plan_json):
         n = costmodel.load_plan_store(args.plan_json)
         print(f"[plan] loaded {n} plan(s) from {args.plan_json}")
 
-    # Plan once: the engine is the step.  Restarted segments re-enter here
-    # with the plan cache warm, so only the first segment ever probes.
-    # params0 doubles as every segment's (deterministic) starting point.
+    # Elastic resume: when a checkpoint exists, its mesh is the *intent*;
+    # the devices this process actually has are the constraint.  An
+    # explicit --mesh wins; otherwise re-plan the checkpoint's mesh onto
+    # the surviving devices (same model parallelism, largest feasible
+    # data degree) instead of hard-failing on the fingerprint mismatch.
+    stored_meta = None
+    if ckpt and ckpt.latest_step() is not None:
+        stored_meta = ckpt.read_meta()
     mesh = None
     if args.mesh:
         from repro.launch.mesh import make_mesh_from_spec
@@ -160,12 +192,28 @@ def main(argv=None):
                              f"mesh's data-parallel degree {d}")
         print(f"[mesh] {costmodel.format_mesh(costmodel.mesh_axes(mesh))} "
               f"over {len(jax.devices())} devices")
+    elif stored_meta and stored_meta.get("mesh_axes"):
+        from repro.launch.mesh import make_mesh_from_spec
+        stored_axes = tuple((n, int(s))
+                            for n, s in stored_meta["mesh_axes"])
+        live_axes = elastic_mesh_axes(stored_axes, len(jax.devices()),
+                                      args.batch)
+        if live_axes != stored_axes:
+            print(f"[elastic] checkpoint mesh "
+                  f"{costmodel.format_mesh(stored_axes)} -> "
+                  f"{costmodel.format_mesh(live_axes)} on "
+                  f"{len(jax.devices())} surviving devices (re-planning; "
+                  f"ledger and noise stream continue)")
+        if live_axes:
+            mesh = make_mesh_from_spec(
+                ",".join(f"{n}:{s}" for n, s in live_axes))
     params0, _ = model.init(jax.random.PRNGKey(0))
     engine = PrivacyEngine(
         model.apply, params0, batch_fn(0), dp=dpc, optimizer="adamw",
         lr=lambda step: cosine_schedule(step, warmup=10, total=args.steps,
                                         peak=args.lr),
-        weight_decay=0.01, accountant=acct, mesh=mesh)
+        weight_decay=0.01, accountant=acct, mesh=mesh,
+        run_seed=args.run_seed)
     # Fixed strategies bypass the planner; don't pay an advisory probe for
     # them unless the user asks.
     if args.explain or dpc.strategy == "auto":
@@ -177,25 +225,61 @@ def main(argv=None):
         print(f"[plan] wrote {args.plan_json}")
 
     # One monitor for the whole run: stragglers survive restarts instead of
-    # being read off a fresh (empty) StepMonitor at the end.
+    # being read off a fresh (empty) StepMonitor at the end (and they
+    # survive *process* deaths too — the monitor rides in the checkpoint).
     mon = StepMonitor()
+    mesh_axes_now = costmodel.mesh_axes(mesh)
+
+    def train_state(params, opt):
+        return DPTrainState(
+            params=params, opt=opt, clip_state=engine.clip_state_dict(),
+            ledger=acct.state_dict(), plan_fingerprint=engine.fingerprint(),
+            monitor=mon.state_dict(), run_seed=args.run_seed,
+            mesh_axes=mesh_axes_now)
 
     def segment(restart_count):
         params = params0
         opt = adamw_init(params)
         start = 0
         if ckpt and ckpt.latest_step() is not None:
-            (params, opt), start = ckpt.restore((params, opt))
-            start += 1
+            st, at = ckpt.restore_state(params, opt, fallback=True)
+            if st.run_seed is not None and st.run_seed != args.run_seed:
+                raise SystemExit(
+                    f"checkpoint noise stream run_seed={st.run_seed} != "
+                    f"--run-seed {args.run_seed}: resuming would draw a "
+                    f"different noise sequence than the run being resumed")
+            if st.plan_fingerprint and \
+                    st.plan_fingerprint != engine.fingerprint():
+                # A mesh change is the one legitimate fingerprint drift:
+                # cross-check by re-keying under the checkpoint's mesh.
+                if st.plan_fingerprint != engine.fingerprint(
+                        mesh=st.mesh_axes):
+                    raise SystemExit(
+                        "checkpoint plan fingerprint mismatch beyond the "
+                        "mesh: model code, shapes, or DP config changed; "
+                        "refusing to resume onto a different mechanism")
+            params, opt = st.params, st.opt
+            engine.load_clip_state(st.clip_state)
+            if st.ledger is not None:
+                acct.load_state_dict(st.ledger)
+            if st.monitor is not None:
+                mon.load_state_dict(st.monitor)
+            start = at + 1
             print(f"[restore] resuming from step {start}")
+        else:
+            # From-scratch (re)start: params go back to params0, so the
+            # ledger and cross-step clip state must go back too — a
+            # restarted segment that kept counting would overstate ε and
+            # clip with another run's lagged norms.
+            engine.reset_clip_state()
+            acct.reset()
         losses = []
         for step in range(start, args.steps):
             chaos.maybe_fail(step)
             mon.start()
             batch = jax.tree.map(jnp.asarray, batch_fn(step))
-            key = jax.random.PRNGKey(1000 + step)
             params, opt, loss, aux = engine.private_step(
-                params, opt, batch, jax.random.key_data(key))
+                params, opt, batch, step=step)
             dt = mon.stop(step)
             losses.append(float(loss))
             if step % 10 == 0 or step == args.steps - 1:
@@ -212,13 +296,16 @@ def main(argv=None):
                       f"{clip_msg} {dt*1e3:.0f}ms"
                       + (f" [{engine.report()}]" if args.noise else ""))
             if ckpt and (step + 1) % args.ckpt_every == 0:
-                ckpt.save_async(step, (params, opt))
+                ckpt.save_state_async(step, train_state(params, opt))
         if ckpt:
             ckpt.wait()
-            ckpt.save(args.steps - 1, (params, opt))
+            ckpt.save_state(args.steps - 1, train_state(params, opt))
         return losses
 
-    losses, restarts = run_with_restarts(segment, max_restarts=5)
+    losses, restarts = run_with_restarts(
+        segment, max_restarts=args.max_restarts,
+        backoff_s=args.restart_backoff,
+        restart_window_s=args.restart_window)
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}), "
           f"restarts={restarts}, stragglers={len(mon.stragglers)}")
     if args.noise:

@@ -1,6 +1,8 @@
-from repro.runtime.fault import ChaosMonkey, WorkerFailure, run_with_restarts
+from repro.runtime.fault import (ChaosMonkey, WorkerFailure, backoff_delay,
+                                 run_with_restarts)
 from repro.runtime.monitor import StepMonitor
-from repro.runtime.elastic import elastic_data_degree
+from repro.runtime.elastic import elastic_data_degree, elastic_mesh_axes
 
-__all__ = ["ChaosMonkey", "WorkerFailure", "run_with_restarts",
-           "StepMonitor", "elastic_data_degree"]
+__all__ = ["ChaosMonkey", "WorkerFailure", "backoff_delay",
+           "run_with_restarts", "StepMonitor", "elastic_data_degree",
+           "elastic_mesh_axes"]

@@ -19,3 +19,39 @@ def elastic_data_degree(n_devices: int, model_par: int, global_batch: int,
     while data > 1 and micro_global % data != 0:
         data -= 1
     return data
+
+
+def elastic_mesh_axes(prev_axes, n_devices: int, global_batch: int,
+                      microbatches: int = 1) -> tuple:
+    """The mesh a run checkpointed on ``prev_axes`` should resume on with
+    ``n_devices`` surviving: model parallelism is preserved (its sharding
+    is baked into the layer math), the data axes collapse to the largest
+    degree that still divides the per-microbatch global batch.  Returns
+    the normalized axes tuple (``()`` = resume unsharded) — feed it to
+    the engine/planner, which re-plans for the new topology while the
+    accountant ledger and the deterministic noise stream continue
+    unbroken."""
+    from repro.core.costmodel import DATA_AXIS_NAMES
+
+    prev = tuple((str(n), int(s)) for n, s in prev_axes)
+    if not prev:
+        return ()
+    model_axes = tuple((n, s) for n, s in prev if n not in DATA_AXIS_NAMES)
+    model_par = 1
+    for _, s in model_axes:
+        model_par *= s
+    data = elastic_data_degree(n_devices, model_par, global_batch,
+                               microbatches)
+    data_name = next((n for n, _ in prev if n in DATA_AXIS_NAMES), "data")
+    if data <= 1:
+        return model_axes            # () when there was no model axis
+    out = []
+    placed = False
+    for n, s in prev:
+        if n in DATA_AXIS_NAMES:
+            if not placed:           # collapse all data axes into one
+                out.append((data_name, data))
+                placed = True
+        else:
+            out.append((n, s))
+    return tuple(out)

@@ -37,3 +37,29 @@ class StepMonitor:
 
     def is_straggler(self, dt: float) -> bool:
         return self.ema is not None and dt > self.threshold * self.ema
+
+    # -- checkpoint (de)serialization -----------------------------------
+    # The monitor rides along in DPTrainState so straggler history and the
+    # EMA baseline survive restarts instead of resetting to cold-start
+    # (where the first post-restore step would re-seed the EMA and mask
+    # a genuinely degraded host).
+
+    def state_dict(self) -> dict:
+        return {"alpha": self.alpha, "threshold": self.threshold,
+                "ema": self.ema,
+                "stragglers": [[int(s), float(dt)]
+                               for s, dt in self.stragglers]}
+
+    def load_state_dict(self, state: dict):
+        self.alpha = float(state["alpha"])
+        self.threshold = float(state["threshold"])
+        self.ema = None if state["ema"] is None else float(state["ema"])
+        self.stragglers = [(int(s), float(dt))
+                           for s, dt in state["stragglers"]]
+        self._t0 = None
+
+    @classmethod
+    def from_state(cls, state: dict) -> "StepMonitor":
+        mon = cls()
+        mon.load_state_dict(state)
+        return mon
