@@ -1,0 +1,31 @@
+"""Static DP verification (``dpcheck``).
+
+Traces :class:`repro.core.engine.PrivacyEngine`'s private step to a
+jaxpr and proves the clip → aggregate → noise pipeline is well-formed
+by abstract interpretation — no execution.  Entry points:
+
+  * ``engine.verify()`` — the engine-side surface (returns a
+    :class:`~repro.analysis.report.VerifyReport`);
+  * :func:`repro.analysis.verifier.verify_engine` — the functional core;
+  * ``python -m repro.launch.dpcheck`` — the CLI sweep over the model
+    registry × clip modes × mesh specs (the CI gate).
+
+The pipeline cooperates by tagging its load-bearing values with the
+zero-cost :func:`repro.analysis.markers.tag` primitive (clip
+coefficients, group norms, realizations, noise terms), so the analyzer
+recognizes structure instead of pattern-matching primitive soup.
+"""
+from repro.analysis.markers import MARKER_PRIMITIVE, is_marker, tag
+from repro.analysis.report import (DPVerificationError, Finding,
+                                   VerifyReport)
+from repro.analysis.verifier import verify_engine
+
+__all__ = [
+    "DPVerificationError",
+    "Finding",
+    "MARKER_PRIMITIVE",
+    "VerifyReport",
+    "is_marker",
+    "tag",
+    "verify_engine",
+]

@@ -1,0 +1,74 @@
+"""``dp_tag``: a zero-cost identity primitive carrying static metadata.
+
+The static verifier (:mod:`repro.analysis`) reads the private step's
+jaxpr.  Pattern-matching "the clip" or "the noise" out of raw primitive
+soup (``min``/``div``/``erf_inv`` chains) would be fragile against any
+refactor of :mod:`repro.core.strategies` — so the core pipeline *tags*
+its semantically load-bearing values instead:
+
+  * ``kind="clip_coef"``   — the per-example clip coefficients, at the
+    point where they are computed (a mutant that replaces
+    ``clip_coefficients`` wholesale loses the tag, which is itself a
+    finding);
+  * ``kind="group_norm"``  — a plan group's per-example squared norms,
+    carrying the group key and the realized method;
+  * ``kind="realization"`` — a kind-level norm realization after method
+    resolution (the census the plan pass cross-checks);
+  * ``kind="fused_impl"``  — the fused norm+contrib single-pass
+    realizations (``gram_norm_fused``);
+  * ``kind="noise"``       — each Gaussian noise term, carrying the
+    structural scale ``sigma = noise_multiplier * l2_clip``.
+
+``tag(x, **params)`` is the identity on ``x`` — it lowers to a no-op,
+is linear under AD (cotangents pass through), and vmaps trivially — so
+tagging costs nothing at runtime and survives ``jit``/``grad``/``vmap``
+into the traced graph, where the analyzer finds it as a ``dp_tag`` eqn
+with the params attached.  Only hashable static values (str/int/float/
+bool) may be passed as params.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from jax.interpreters import ad, batching, mlir
+
+try:  # jax >= 0.4.16
+    from jax.extend.core import Primitive
+except ImportError:  # pragma: no cover - older jax
+    from jax.core import Primitive  # type: ignore[attr-defined, no-redef]
+
+MARKER_PRIMITIVE = "dp_tag"
+
+dp_tag_p = Primitive(MARKER_PRIMITIVE)
+dp_tag_p.def_impl(lambda x, **params: x)
+dp_tag_p.def_abstract_eval(lambda x, **params: x)
+mlir.register_lowering(dp_tag_p, lambda ctx, x, **params: [x])
+# Identity is linear: JVP passes tangents through, transpose passes
+# cotangents through — a tagged value inside a differentiated region
+# does not break AD (and the tag survives into the backward graph).
+ad.deflinear2(dp_tag_p, lambda ct, _, **params: [ct])
+batching.primitive_batchers[dp_tag_p] = \
+    lambda args, dims, **params: (dp_tag_p.bind(args[0], **params), dims[0])
+
+_ALLOWED = (str, int, float, bool)
+
+
+def tag(x, **params: Any):
+    """Identity on ``x``, recording ``params`` in the traced graph.
+
+    ``params`` must include ``kind=`` and contain only static hashable
+    scalars; they surface verbatim as the ``dp_tag`` eqn's params.
+    """
+    if "kind" not in params:
+        raise ValueError("dp_tag requires a kind= param")
+    for k, v in params.items():
+        if not isinstance(v, _ALLOWED):
+            raise TypeError(
+                f"dp_tag param {k}={v!r} is not a static scalar "
+                f"(str/int/float/bool)")
+    return dp_tag_p.bind(x, **params)
+
+
+def is_marker(eqn) -> bool:
+    """True if a jaxpr eqn is a ``dp_tag`` marker."""
+    return eqn.primitive.name == MARKER_PRIMITIVE

@@ -1,0 +1,235 @@
+"""Noise-discipline pass: one fresh Gaussian per released aggregate.
+
+Checks, over the flattened private-step graph:
+
+  * **count** — with ``noise_multiplier > 0`` there is exactly one
+    ``dp_tag[kind=noise]`` marker (and one ``erf_inv``, the structural
+    core of the inverse-CDF Gaussian sampler) per released parameter
+    leaf.  Zero draws = the noise was dropped; more = double noise (the
+    variance, and hence the real ε, silently changes).
+  * **scale** — each noise marker's recorded ``sigma`` equals
+    ``noise_multiplier * l2_clip`` (the sensitivity-calibrated scale;
+    the ``/denom`` normalization is applied uniformly to signal and
+    noise afterwards, preserving the SNR the accountant assumes).
+  * **precision** — noise is drawn in float32 *before* any cast to the
+    parameter dtype, and the clip-decision inputs (clip coefficients,
+    group norms) are float32: a bf16 norm loses mantissa exactly where
+    the sensitivity proof needs exactness.
+  * **key hygiene** — every ``random_bits`` consumption chains back
+    through key plumbing (wrap/split/fold_in/slice) to the *step key
+    input* of the jaxpr — never to a constant (a baked-in key makes the
+    noise deterministic across runs) — and no two draws consume the
+    same derived key (key reuse correlates noise across leaves, so the
+    leaves no longer get independent Gaussians).
+
+``fold_in(run_key, step)`` itself happens host-side (the step key is a
+jaxpr *input*), so per-step key derivation is enforced at the engine
+level (``PrivacyEngine._check_key``) and recorded here as checked.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Set
+
+import numpy as np
+
+from repro.analysis.graph import FlatGraph, Literal, Var
+from repro.analysis.report import Finding
+
+# Primitives that only *route* key material without consuming it.
+_KEY_PLUMBING = {
+    "random_wrap", "random_unwrap", "random_split", "random_fold_in",
+    "threefry2x32", "slice", "dynamic_slice", "squeeze", "reshape",
+    "transpose", "convert_element_type", "copy", "dp_tag", "broadcast_in_dim",
+    "concatenate", "rev", "bitcast_convert_type", "gather",
+}
+
+_F32 = {"float32"}
+
+
+def _dtype_name(v) -> str:
+    return str(getattr(getattr(v, "aval", None), "dtype", ""))
+
+
+class _KeyTracer:
+    """Walk a key operand back to its origin through plumbing prims."""
+
+    def __init__(self, graph: FlatGraph, key_inputs: Set[Var]):
+        self.graph = graph
+        self.key_inputs = key_inputs
+
+    def origin(self, v) -> str:
+        """'input' | 'constant' | 'opaque:<prim>'."""
+        seen = set()
+        frontier = [v]
+        saw_input = saw_const = False
+        opaque: Optional[str] = None
+        while frontier:
+            cur = frontier.pop()
+            if isinstance(cur, Literal):
+                saw_const = True
+                continue
+            if cur in seen:
+                continue
+            seen.add(cur)
+            if cur in self.key_inputs:
+                saw_input = True
+                continue
+            node = self.graph.producer.get(cur)
+            if node is None:
+                # A jaxpr invar that is *not* the key input, or a const.
+                if cur in self.graph.invars:
+                    saw_input = True  # derived from some traced input
+                else:
+                    saw_const = True
+                continue
+            if node.prim in _KEY_PLUMBING:
+                frontier.extend(node.invars)
+            elif node.prim in ("iota", "add", "xor", "or", "and", "shift_left",
+                               "shift_right_logical", "mul", "sub"):
+                # threefry internals mix counters (iota) with key words.
+                frontier.extend(iv for iv in node.invars
+                                if not isinstance(iv, Literal))
+            else:
+                opaque = node.prim
+        if saw_input:
+            return "input"
+        if opaque is not None:
+            return f"opaque:{opaque}"
+        return "constant"
+
+    def derived_key_id(self, v):
+        """Resolve through pure identity plumbing (wrap/unwrap/cast/tag)
+        to the var that identifies *this particular derived key*: two
+        draws resolving to the same var consume the same randomness."""
+        while isinstance(v, Var):
+            node = self.graph.producer.get(v)
+            if node is None:
+                return v
+            if node.prim in ("random_wrap", "random_unwrap",
+                            "convert_element_type", "copy", "dp_tag",
+                            "reshape", "bitcast_convert_type"):
+                v = node.invars[0]
+                continue
+            return v
+        return v
+
+
+def check_noise(graph: FlatGraph, *,
+                key_inputs: Set[Var],
+                n_param_leaves: int,
+                noise_multiplier: float,
+                l2_clip: float) -> List[Finding]:
+    findings: List[Finding] = []
+    where = "noise"
+
+    markers = [(n, g) for n, g in graph.markers()
+               if n.params.get("kind") == "noise"]
+    n_erf_inv = graph.count_prim("erf_inv")
+
+    if noise_multiplier <= 0.0:
+        if markers:
+            findings.append(Finding(
+                "error", "noise_without_sigma",
+                f"{len(markers)} noise marker(s) present but "
+                f"noise_multiplier == {noise_multiplier}", where))
+        return findings
+
+    # -- count: one fresh Gaussian per released leaf ----------------------
+    if len(markers) == 0:
+        findings.append(Finding(
+            "error", "noise_missing",
+            "noise_multiplier > 0 but no Gaussian noise marker appears "
+            "in the step graph — the release is un-noised", where))
+    elif len(markers) < n_param_leaves:
+        findings.append(Finding(
+            "error", "noise_missing",
+            f"only {len(markers)} noise draw(s) for {n_param_leaves} "
+            f"released parameter leaves", where))
+    elif len(markers) > n_param_leaves:
+        findings.append(Finding(
+            "error", "noise_duplicated",
+            f"{len(markers)} noise draws for {n_param_leaves} released "
+            f"parameter leaves — noise is added more than once, the "
+            f"effective sigma differs from the accountant's", where))
+    if n_erf_inv > n_param_leaves:
+        findings.append(Finding(
+            "error", "noise_duplicated",
+            f"{n_erf_inv} Gaussian samplers (erf_inv) traced for "
+            f"{n_param_leaves} released leaves", where))
+    elif 0 < n_erf_inv < n_param_leaves and markers:
+        findings.append(Finding(
+            "warning", "noise_sampler_census",
+            f"{n_erf_inv} erf_inv eqns vs {n_param_leaves} leaves — "
+            f"sampler not recognized per-leaf (custom sampler?)", where))
+
+    # -- scale: sigma == noise_multiplier * l2_clip -----------------------
+    expect = float(noise_multiplier) * float(l2_clip)
+    for node, _ in markers:
+        sigma = float(node.params.get("sigma", float("nan")))
+        if not np.isclose(sigma, expect, rtol=1e-6, atol=0.0):
+            findings.append(Finding(
+                "error", "noise_scale_mismatch",
+                f"noise marker sigma={sigma} != noise_multiplier * "
+                f"l2_clip = {expect}", where))
+            break
+        m = float(node.params.get("noise_multiplier", noise_multiplier))
+        c = float(node.params.get("l2_clip", l2_clip))
+        if not (np.isclose(m, noise_multiplier) and np.isclose(c, l2_clip)):
+            findings.append(Finding(
+                "error", "noise_scale_mismatch",
+                f"noise marker recorded (noise_multiplier={m}, "
+                f"l2_clip={c}) but the engine config says "
+                f"({noise_multiplier}, {l2_clip})", where))
+            break
+
+    # -- precision: f32 draw, f32 clip decisions --------------------------
+    for node, _ in markers:
+        dt = _dtype_name(node.outvars[0])
+        if dt and dt not in _F32:
+            findings.append(Finding(
+                "error", "noise_low_precision",
+                f"noise drawn/scaled in {dt}, not float32 — the cast to "
+                f"the param dtype must come *after* signal+noise", where))
+            break
+    for kind, code in (("clip_coef", "clip_coef_low_precision"),
+                       ("group_norm", "norm_low_precision")):
+        for node, _ in graph.markers():
+            if node.params.get("kind") != kind:
+                continue
+            dt = _dtype_name(node.outvars[0])
+            if dt and "float" in dt and dt not in _F32 \
+                    and not dt.endswith("64"):
+                findings.append(Finding(
+                    "error", code,
+                    f"{kind} computed in {dt}; clip decisions must be "
+                    f"float32 (bf16 norms break the sensitivity bound)",
+                    where))
+                break
+
+    # -- key hygiene ------------------------------------------------------
+    tracer = _KeyTracer(graph, key_inputs)
+    seen_ids = {}
+    for node in graph.iter_nodes(recursive=False):
+        if node.prim != "random_bits":
+            continue
+        key_op = node.invars[0]
+        org = tracer.origin(key_op)
+        if org == "constant":
+            findings.append(Finding(
+                "error", "key_constant",
+                "a random_bits draw uses a constant key — noise would "
+                "repeat identically across runs/steps", where))
+        elif org.startswith("opaque"):
+            findings.append(Finding(
+                "warning", "key_opaque",
+                f"key provenance passes through unmodeled {org}", where))
+        kid = tracer.derived_key_id(key_op)
+        if isinstance(kid, Var):
+            if kid in seen_ids:
+                findings.append(Finding(
+                    "error", "key_reuse",
+                    "two Gaussian draws consume the same derived key — "
+                    "noise is correlated across leaves", where))
+            seen_ids[kid] = node
+
+    return findings

@@ -1,0 +1,614 @@
+"""Per-example taint tracking over the flattened private-step graph.
+
+The lattice value for each variable records (a) which of its axes carry
+the *example* dimension (``batch``), (b) whether the value has been
+scaled by a per-example clip coefficient (``clipped`` — structurally:
+the ``dp_tag[kind=clip_coef]`` marker entered multiplicatively on its
+history), and (c) whether the value *is* coefficient-derived
+(``weight``).
+
+The invariant proved: on every path from per-example quantities to the
+released parameter/optimizer outputs, a clip contraction happens
+*before* any batch-axis reduction.  Concretely, any reduction over a
+batch-tainted axis (``reduce_sum``, a contracting ``dot_general``, a
+conv weight-gradient contraction, a ``scatter-add``) whose operands are
+neither clipped nor coefficient-derived is recorded as a violation;
+violations whose results reach the params/opt outputs are errors
+(reductions feeding only the loss/aux monitoring outputs — the mean
+loss, clip fractions — are the expected exemptions).
+
+This is a structural lattice walk, not a sensitivity calculus: it
+proves the *shape* of the pipeline (clip-then-reduce, exactly the class
+of bug Lee & Kifer 2020 catalogue), with conservative fallbacks for
+primitives it does not model (flagged as approximations).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Tuple
+
+import numpy as np
+
+from repro.analysis.graph import FlatGraph, Literal, Node, Var
+
+EMPTY: FrozenSet[int] = frozenset()
+
+
+@dataclasses.dataclass(frozen=True)
+class Taint:
+    batch: FrozenSet[int] = EMPTY   # axes carrying the example dim
+    clipped: bool = False           # clip coefficient entered the chain
+    weight: bool = False            # value is coefficient-derived
+
+    @property
+    def per_example(self) -> bool:
+        return bool(self.batch)
+
+    def shift(self, delta: int) -> "Taint":
+        return dataclasses.replace(
+            self, batch=frozenset(a + delta for a in self.batch
+                                  if a + delta >= 0))
+
+
+NONE = Taint()
+
+
+@dataclasses.dataclass
+class Violation:
+    node: Node
+    message: str
+
+
+@dataclasses.dataclass
+class TaintResult:
+    taints: Dict[Var, Taint]
+    violations: List[Violation]
+    approx: List[str]
+
+
+# Elementwise / same-shape primitives where taint unions across operands
+# (the generic same-shape rule below covers most; these are ones whose
+# tainted operands may be scalars/broadcast-shaped too).
+_MUL_LIKE = {"mul", "div"}
+_ADD_LIKE = {"add", "sub", "add_any"}
+_REDUCE = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+           "reduce_and", "reduce_or", "reduce_xor", "argmax", "argmin"}
+_SHAPE_PASS = {"copy", "convert_element_type", "stop_gradient",
+               "reduce_precision", "dp_tag", "neg", "abs", "sign", "sqrt",
+               "rsqrt", "exp", "log", "tanh", "logistic", "erf", "erf_inv",
+               "floor", "ceil", "round", "is_finite", "not", "real", "imag",
+               "integer_pow", "exp2", "log1p", "expm1", "cbrt", "square",
+               "sin", "cos", "tan", "sinh", "cosh", "asin", "acos", "atan",
+               "asinh", "acosh", "atanh", "erfc", "logistic", "rev",
+               "optimization_barrier"}
+
+
+def _get(taints, v) -> Taint:
+    if isinstance(v, Literal):
+        return NONE
+    return taints.get(v, NONE)
+
+
+def _shape(v) -> Tuple[int, ...]:
+    return tuple(getattr(v.aval, "shape", ()) or ())
+
+
+class TaintPass:
+    def __init__(self, graph: FlatGraph, batch_size: int):
+        self.graph = graph
+        self.B = batch_size
+        self.violations: List[Violation] = []
+        self.approx: List[str] = []
+
+    # -- entry -------------------------------------------------------------
+
+    def run(self, init: Dict[Var, Taint]) -> TaintResult:
+        taints = dict(init)
+        for node in self.graph.nodes:
+            self._step(node, taints)
+        return TaintResult(taints, self.violations, self.approx)
+
+    # -- helpers -----------------------------------------------------------
+
+    def _violate(self, node: Node, msg: str):
+        self.violations.append(Violation(node, msg))
+
+    def _covered(self, ins: List[Taint]) -> bool:
+        """A batch reduction is structurally covered by the clip when any
+        operand is clipped or coefficient-derived."""
+        return any(t.clipped or t.weight for t in ins)
+
+    def _reduce_event(self, node: Node, ins: List[Taint], what: str):
+        if not self._covered(ins):
+            self._violate(node,
+                          f"batch-axis reduction in `{node.prim}` ({what}) "
+                          f"with no clip contraction on any operand")
+
+    def _absorb_sub(self, sub_pass: "TaintPass", body: FlatGraph):
+        """Surface a sub-body's violations, dropping ones whose result is
+        dead inside the body (e.g. the primal ``sum(losses)`` the capture
+        backward traces but discards)."""
+        live = body.backward_slice(
+            [v for v in body.outvars if not isinstance(v, Literal)])
+        body_ids = {id(n) for n in body.nodes}
+        for v in sub_pass.violations:
+            if id(v.node) in body_ids and not any(
+                    not isinstance(ov, Literal) and ov in live
+                    for ov in v.node.outvars):
+                continue
+            self.violations.append(v)
+        self.approx.extend(sub_pass.approx)
+
+    # -- per-node transfer -------------------------------------------------
+
+    def _step(self, node: Node, taints: Dict[Var, Taint]):
+        prim = node.prim
+        ins = [_get(taints, v) for v in node.invars]
+        out_shapes = [_shape(v) for v in node.outvars]
+
+        handler = getattr(self, f"_h_{prim.replace('-', '_')}", None)
+        if handler is not None:
+            handler(node, ins, taints)
+            return
+
+        if not any(t.per_example or t.clipped or t.weight for t in ins):
+            return  # untainted in, untainted out
+
+        # Binary arithmetic broadcasts (rank-aligned), so a coefficient
+        # shaped (B,1,...,1) against a (B,...) payload is still
+        # elementwise for taint purposes — don't let the shape mismatch
+        # drop it to the fallback, which would lose the weight flag.
+        if prim in _MUL_LIKE or prim in _ADD_LIKE or prim == "select_n":
+            self._elementwise(node, ins, taints)
+            return
+
+        # Generic same-shape rule: if every tainted operand has exactly
+        # the output shape, the op is (for taint purposes) elementwise.
+        if len(node.outvars) >= 1 and all(
+                _shape(v) == out_shapes[0]
+                for v, t in zip(node.invars, ins)
+                if (t.per_example or t.clipped or t.weight)):
+            self._elementwise(node, ins, taints)
+            return
+
+        self._fallback(node, ins, taints)
+
+    def _elementwise(self, node: Node, ins: List[Taint], taints):
+        batch = frozenset().union(*[t.batch for t in ins]) if ins else EMPTY
+        pe = [t for t in ins if t.per_example]
+        if node.prim in _MUL_LIKE:
+            clipped = any(t.clipped or t.weight for t in ins) and bool(pe)
+        elif node.prim == "select_n":
+            # pred selects; the value operands carry the payload.
+            vals = ins[1:]
+            pev = [t for t in vals if t.per_example]
+            clipped = bool(pev) and all(t.clipped or t.weight for t in pev)
+        elif node.prim in _ADD_LIKE:
+            clipped = bool(pe) and all(t.clipped or t.weight for t in pe)
+        elif node.prim in _SHAPE_PASS and len(pe) == 1:
+            clipped = pe[0].clipped
+        else:
+            clipped = bool(pe) and all(t.clipped or t.weight for t in pe)
+        weight = bool(pe) and all(t.weight for t in pe)
+        t = Taint(batch, clipped, weight)
+        for ov in node.outvars:
+            taints[ov] = t
+
+    def _fallback(self, node: Node, ins: List[Taint], taints):
+        """Unmodeled shape-changing primitive: if the output keeps a
+        leading example axis, keep the taint there; otherwise treat it
+        as a (possibly covered) batch reduction."""
+        clipped = any(t.clipped for t in ins)
+        weight = all(t.weight for t in ins if t.per_example) \
+            and any(t.per_example for t in ins)
+        payload = [t for t in ins if t.per_example and not t.weight]
+        self.approx.append(node.prim)
+        for ov in node.outvars:
+            shp = _shape(ov)
+            if shp and shp[0] == self.B and any(
+                    0 in t.batch or self.B in
+                    [(_shape(v)[a] if a < len(_shape(v)) else -1)
+                     for a in t.batch]
+                    for v, t in zip(node.invars, ins) if t.per_example):
+                taints[ov] = Taint(frozenset({0}), clipped, weight)
+            elif payload:
+                self._reduce_event(node, ins, f"unmodeled `{node.prim}`")
+                taints[ov] = Taint(EMPTY, self._covered(ins), False)
+            else:
+                taints[ov] = Taint(EMPTY, clipped, weight)
+
+    # -- structured handlers ----------------------------------------------
+
+    def _h_dp_tag(self, node: Node, ins, taints):
+        t = ins[0]
+        kind = node.params.get("kind")
+        if kind in ("clip_coef",):
+            # The structural clip recognition: downstream of this marker,
+            # multiplying by the coefficients IS the clip contraction.
+            t = dataclasses.replace(t, weight=True)
+        taints[node.outvars[0]] = t
+
+    def _h_broadcast_in_dim(self, node: Node, ins, taints):
+        t = ins[0]
+        bcd = node.params["broadcast_dimensions"]
+        batch = frozenset(bcd[a] for a in t.batch if a < len(bcd))
+        taints[node.outvars[0]] = dataclasses.replace(t, batch=batch)
+
+    def _h_transpose(self, node: Node, ins, taints):
+        t = ins[0]
+        perm = node.params["permutation"]
+        batch = frozenset(j for j, a in enumerate(perm) if a in t.batch)
+        taints[node.outvars[0]] = dataclasses.replace(t, batch=batch)
+
+    def _h_squeeze(self, node: Node, ins, taints):
+        t = ins[0]
+        dims = set(node.params["dimensions"])
+        remap, j = {}, 0
+        for a in range(len(_shape(node.invars[0]))):
+            if a in dims:
+                continue
+            remap[a] = j
+            j += 1
+        batch = frozenset(remap[a] for a in t.batch if a in remap)
+        taints[node.outvars[0]] = dataclasses.replace(t, batch=batch)
+
+    def _h_reshape(self, node: Node, ins, taints):
+        t = ins[0]
+        in_shape = _shape(node.invars[0])
+        out_shape = _shape(node.outvars[0])
+        batch = set()
+        for a in t.batch:
+            split_all = (a < len(in_shape) and in_shape[a] == self.B)
+            outs = _reshape_axis_map(in_shape, out_shape, a,
+                                     split_all=split_all)
+            batch.update(outs)
+        taints[node.outvars[0]] = dataclasses.replace(
+            t, batch=frozenset(batch))
+
+    def _h_slice(self, node: Node, ins, taints):
+        taints[node.outvars[0]] = ins[0]
+
+    def _h_dynamic_slice(self, node: Node, ins, taints):
+        taints[node.outvars[0]] = ins[0]
+
+    def _h_dynamic_update_slice(self, node: Node, ins, taints):
+        op, upd = ins[0], ins[1]
+        taints[node.outvars[0]] = Taint(
+            op.batch | upd.batch,
+            (op.clipped or not op.per_example)
+            and (upd.clipped or not upd.per_example)
+            and (op.per_example or upd.per_example),
+            op.weight and upd.weight)
+
+    def _h_concatenate(self, node: Node, ins, taints):
+        batch = frozenset().union(*[t.batch for t in ins])
+        pe = [t for t in ins if t.per_example]
+        clipped = bool(pe) and all(t.clipped or t.weight for t in pe)
+        weight = bool(pe) and all(t.weight for t in pe)
+        taints[node.outvars[0]] = Taint(batch, clipped, weight)
+
+    def _h_pad(self, node: Node, ins, taints):
+        taints[node.outvars[0]] = ins[0]
+
+    def _h_sort(self, node: Node, ins, taints):
+        for ov, t in zip(node.outvars, ins):
+            taints[ov] = t
+
+    def _h_iota(self, node: Node, ins, taints):
+        taints[node.outvars[0]] = NONE
+
+    def _h_reduce_sum(self, node: Node, ins, taints):
+        self._reduce(node, ins, taints)
+
+    def _h_reduce_max(self, node: Node, ins, taints):
+        self._reduce(node, ins, taints)
+
+    def _h_reduce_min(self, node: Node, ins, taints):
+        self._reduce(node, ins, taints)
+
+    def _h_reduce_prod(self, node: Node, ins, taints):
+        self._reduce(node, ins, taints)
+
+    def _h_reduce_and(self, node: Node, ins, taints):
+        self._reduce(node, ins, taints)
+
+    def _h_reduce_or(self, node: Node, ins, taints):
+        self._reduce(node, ins, taints)
+
+    def _h_argmax(self, node: Node, ins, taints):
+        self._reduce(node, ins, taints)
+
+    def _h_argmin(self, node: Node, ins, taints):
+        self._reduce(node, ins, taints)
+
+    def _reduce(self, node: Node, ins, taints):
+        t = ins[0]
+        axes = set(node.params.get("axes", ()))
+        if t.batch & axes and t.per_example and not (t.clipped or t.weight):
+            self._reduce_event(node, ins, "reduce over the example axis")
+        remap, j = {}, 0
+        for a in range(len(_shape(node.invars[0]))):
+            if a in axes:
+                continue
+            remap[a] = j
+            j += 1
+        batch = frozenset(remap[a] for a in t.batch if a in remap)
+        reduced_batch = bool(t.batch & axes)
+        taints[node.outvars[0]] = Taint(
+            batch,
+            t.clipped or (reduced_batch and (t.clipped or t.weight)),
+            t.weight and not reduced_batch)
+
+    def _h_dot_general(self, node: Node, ins, taints):
+        lhs_t, rhs_t = ins[0], ins[1]
+        (lc, rc), (lb, rb) = node.params["dimension_numbers"]
+        lhs_shape, rhs_shape = _shape(node.invars[0]), _shape(node.invars[1])
+        covered = self._covered(ins)
+        # A contracted (or dot-batch "diagonal"… no: dot batch dims are
+        # elementwise) tainted axis is a batch reduction.
+        for t, contract, label in ((lhs_t, lc, "lhs"), (rhs_t, rc, "rhs")):
+            if t.per_example and (t.batch & set(contract)) \
+                    and not (t.clipped or t.weight) and not covered:
+                self._reduce_event(node, ins,
+                                   f"dot_general contracts the {label} "
+                                   f"example axis")
+        # Output layout: [batch dims, lhs free, rhs free].
+        out_batch = set()
+        nb = len(lb)
+        for i, (la, ra) in enumerate(zip(lb, rb)):
+            if la in lhs_t.batch or ra in rhs_t.batch:
+                out_batch.add(i)
+        lhs_free = [a for a in range(len(lhs_shape))
+                    if a not in lc and a not in lb]
+        for i, a in enumerate(lhs_free):
+            if a in lhs_t.batch:
+                out_batch.add(nb + i)
+        rhs_free = [a for a in range(len(rhs_shape))
+                    if a not in rc and a not in rb]
+        for i, a in enumerate(rhs_free):
+            if a in rhs_t.batch:
+                out_batch.add(nb + len(lhs_free) + i)
+        pe = [t for t in ins if t.per_example]
+        clipped = covered and bool(pe)
+        weight = bool(pe) and all(t.weight for t in pe)
+        taints[node.outvars[0]] = Taint(frozenset(out_batch), clipped,
+                                        weight)
+
+    def _h_conv_general_dilated(self, node: Node, ins, taints):
+        lhs_t, rhs_t = ins[0], ins[1]
+        dn = node.params["dimension_numbers"]
+        lhs_spec, out_spec = dn.lhs_spec, dn.out_spec
+        if not (lhs_t.per_example or rhs_t.per_example):
+            return
+        # Plain forward/data-grad conv: example axis in the conv-batch
+        # position, kernel untainted — the example axis passes through.
+        if lhs_t.batch == frozenset({lhs_spec[0]}) \
+                and not rhs_t.per_example:
+            taints[node.outvars[0]] = Taint(
+                frozenset({out_spec[0]}), lhs_t.clipped, False)
+            return
+        # Per-example group trick (the paper's Algorithm 2): the example
+        # axis indexes feature/batch *groups* (count divisible by B), so
+        # each group sees exactly one example — the "contraction" stays
+        # within-example and the output keeps the folded example axis on
+        # its feature dim.  The standard AD weight gradient instead puts
+        # B in the contracted input-feature position with a small group
+        # count, which falls through to the reduction event below.
+        fgc = node.params.get("feature_group_count", 1)
+        bgc = node.params.get("batch_group_count", 1)
+        rhs_spec = dn.rhs_spec
+        grouped = ((lhs_t.batch == frozenset({lhs_spec[1]})
+                    and fgc > 1 and fgc % self.B == 0)
+                   or (lhs_t.batch == frozenset({lhs_spec[0]})
+                       and bgc > 1 and bgc % self.B == 0))
+        if grouped and rhs_t.batch == frozenset({rhs_spec[0]}):
+            taints[node.outvars[0]] = Taint(
+                frozenset({out_spec[1]}),
+                lhs_t.clipped or rhs_t.clipped
+                or lhs_t.weight or rhs_t.weight, False)
+            return
+        # Anything else (weight-gradient convs contract the example axis
+        # through the feature/batch-group trick): a batch reduction.
+        self._reduce_event(node, ins, "conv weight-gradient contraction")
+        out_shape = _shape(node.outvars[0])
+        covered = self._covered(ins)
+        if out_shape and len(out_shape) > out_spec[0] \
+                and out_shape[out_spec[0]] == self.B \
+                and lhs_t.batch:
+            taints[node.outvars[0]] = Taint(
+                frozenset({out_spec[0]}), covered, False)
+        else:
+            taints[node.outvars[0]] = Taint(EMPTY, covered, False)
+
+    def _h_gather(self, node: Node, ins, taints):
+        # take_along_axis / indexing: per-example data or indices keep
+        # the example axis when the output retains a leading B axis.
+        op_t, idx_t = ins[0], ins[1]
+        out_shape = _shape(node.outvars[0])
+        pe = op_t.per_example or idx_t.per_example
+        if not pe:
+            return
+        if out_shape and out_shape[0] == self.B:
+            taints[node.outvars[0]] = Taint(
+                frozenset({0}), op_t.clipped, op_t.weight)
+        else:
+            # A gather that drops the example axis only *selects*; no sum
+            # happens, so it is not a reduction event — but the result is
+            # cross-example-derived, so keep a conservative flag.
+            taints[node.outvars[0]] = Taint(EMPTY, op_t.clipped, False)
+
+    def _scatter_like(self, node: Node, ins, taints):
+        op_t, upd_t = ins[0], ins[2] if len(ins) > 2 else ins[-1]
+        out_shape = _shape(node.outvars[0])
+        if not (op_t.per_example or upd_t.per_example):
+            return
+        if out_shape and out_shape[0] == self.B and upd_t.per_example:
+            taints[node.outvars[0]] = Taint(
+                frozenset({0}), upd_t.clipped, False)
+            return
+        # Updates accumulate into a non-example-indexed output: this is a
+        # batch reduction (segment sums, embedding contribs).
+        if upd_t.per_example and not (upd_t.clipped or upd_t.weight):
+            self._reduce_event(node, [upd_t], "scatter-add over examples")
+        taints[node.outvars[0]] = Taint(
+            op_t.batch, upd_t.clipped or upd_t.weight, False)
+
+    def _h_scatter_add(self, node: Node, ins, taints):
+        self._scatter_like(node, ins, taints)
+
+    def _h_scatter(self, node: Node, ins, taints):
+        self._scatter_like(node, ins, taints)
+
+    def _h_scatter_mul(self, node: Node, ins, taints):
+        self._scatter_like(node, ins, taints)
+
+    def _h_cumsum(self, node: Node, ins, taints):
+        t = ins[0]
+        ax = node.params.get("axis", 0)
+        if ax in t.batch and not (t.clipped or t.weight):
+            self._violate(node, "cumulative op runs *across* examples")
+        taints[node.outvars[0]] = t
+
+    def _h_cumlogsumexp(self, node: Node, ins, taints):
+        self._h_cumsum(node, ins, taints)
+
+    def _h_cummax(self, node: Node, ins, taints):
+        self._h_cumsum(node, ins, taints)
+
+    # -- control flow ------------------------------------------------------
+
+    def _h_scan(self, node: Node, ins, taints):
+        body = node.sub[0] if node.sub else None
+        if body is None:
+            self._fallback(node, ins, taints)
+            return
+        n_consts = node.params.get("num_consts", 0)
+        n_carry = node.params.get("num_carry", 0)
+        consts = ins[:n_consts]
+        carry0 = ins[n_consts:n_consts + n_carry]
+        xs = ins[n_consts + n_carry:]
+        xs_scan_tainted = any(0 in t.batch for t in xs)
+
+        carry_t = list(carry0)
+        body_out = None
+        for _ in range(8):  # carry fixpoint
+            sub_init: Dict[Var, Taint] = {}
+            body_iv = body.invars
+            for v, t in zip(body_iv[:n_consts], consts):
+                sub_init[v] = t
+            for v, t in zip(body_iv[n_consts:n_consts + n_carry], carry_t):
+                sub_init[v] = t
+            for v, t in zip(body_iv[n_consts + n_carry:], xs):
+                sub_init[v] = t.shift(-1)
+            sub_pass = TaintPass(body, self.B)
+            res = sub_pass.run(sub_init)
+            body_out = [(_get(res.taints, v)
+                         if not isinstance(v, Literal) else NONE)
+                        for v in body.outvars]
+            new_carry = body_out[:n_carry]
+            if new_carry == carry_t:
+                break
+            carry_t = [Taint(a.batch | b.batch, a.clipped and b.clipped
+                             if (a.per_example and b.per_example)
+                             else (a.clipped or b.clipped),
+                             a.weight and b.weight)
+                       for a, b in zip(carry_t, new_carry)]
+        # Surface body violations once (steady-state body).
+        self._absorb_sub(sub_pass, body)
+
+        ys = body_out[n_carry:]
+        for ov, t in zip(node.outvars[:n_carry], carry_t):
+            taints[ov] = t
+        for ov, t in zip(node.outvars[n_carry:], ys):
+            t2 = t.shift(+1)
+            if xs_scan_tainted:
+                t2 = dataclasses.replace(t2, batch=t2.batch | {0})
+            taints[ov] = t2
+
+    def _h_while(self, node: Node, ins, taints):
+        body = node.sub[1] if node.sub and len(node.sub) > 1 else None
+        if body is None:
+            self._fallback(node, ins, taints)
+            return
+        cn = node.params.get("cond_nconsts", 0)
+        bn = node.params.get("body_nconsts", 0)
+        carry = ins[cn + bn:]
+        carry_t = list(carry)
+        for _ in range(8):
+            sub_init = {}
+            for v, t in zip(body.invars[:bn], ins[cn:cn + bn]):
+                sub_init[v] = t
+            for v, t in zip(body.invars[bn:], carry_t):
+                sub_init[v] = t
+            sub_pass = TaintPass(body, self.B)
+            res = sub_pass.run(sub_init)
+            new_carry = [(_get(res.taints, v)
+                          if not isinstance(v, Literal) else NONE)
+                         for v in body.outvars]
+            if new_carry == carry_t:
+                break
+            carry_t = [Taint(a.batch | b.batch, a.clipped or b.clipped,
+                             a.weight and b.weight)
+                       for a, b in zip(carry_t, new_carry)]
+        self._absorb_sub(sub_pass, body)
+        for ov, t in zip(node.outvars, carry_t):
+            taints[ov] = t
+
+    def _h_cond(self, node: Node, ins, taints):
+        if not node.sub:
+            self._fallback(node, ins, taints)
+            return
+        args = ins[1:]  # operand 0 is the branch index
+        outs = None
+        for branch in node.sub:
+            sub_init = dict(zip(branch.invars, args))
+            sub_pass = TaintPass(branch, self.B)
+            res = sub_pass.run(sub_init)
+            self._absorb_sub(sub_pass, branch)
+            bt = [(_get(res.taints, v)
+                   if not isinstance(v, Literal) else NONE)
+                  for v in branch.outvars]
+            if outs is None:
+                outs = bt
+            else:
+                outs = [Taint(a.batch | b.batch, a.clipped and b.clipped,
+                              a.weight and b.weight)
+                        for a, b in zip(outs, bt)]
+        for ov, t in zip(node.outvars, outs or []):
+            taints[ov] = t
+
+    def _h_pallas_call(self, node: Node, ins, taints):
+        self._fallback(node, ins, taints)
+
+
+def _reshape_axis_map(in_shape, out_shape, axis,
+                      split_all: bool = False) -> List[int]:
+    """Output axes a tainted input axis lands on under a row-major
+    reshape.  Merges taint the merged axis; splits taint only the
+    outermost factor — the example axis stays the slowest-varying one in
+    a flatten like (B·g,) → (B, g) — EXCEPT when the split axis is the
+    example axis itself (``split_all``, the microbatch reshape
+    (B,) → (m, B/m)): then every factor indexes examples and all split
+    axes are tainted."""
+    def spans(shape):
+        out, period = [], int(np.prod(shape)) if shape else 1
+        for d in shape:
+            block = period // max(d, 1)
+            out.append((block, period))
+            period = block
+        return out
+
+    in_spans, out_spans = spans(in_shape), spans(out_shape)
+    if axis >= len(in_spans):
+        return []
+    blk_i, per_i = in_spans[axis]
+    hits = [j for j, (blk_j, per_j) in enumerate(out_spans)
+            if not (per_j <= blk_i or blk_j >= per_i)]
+    if len(hits) > 1:
+        if split_all:
+            return hits
+        exact = [j for j in hits if out_spans[j] == in_spans[axis]]
+        if exact:
+            return exact[:1]
+        return hits[:1]  # split: outermost factor only
+    return hits

@@ -6,9 +6,10 @@ functions remain as its functional core and compatibility surface."""
 from repro.core.clipping import (ClipPolicy, DPConfig, NormCfg, add_noise,
                                  dp_gradient, non_dp_gradient,
                                  resolve_budgets, resolve_microbatches)
-from repro.core.costmodel import (ExecPlan, check_plan_matches, mesh_axes,
+from repro.core.costmodel import (ExecPlan, check_plan_matches,
+                                  code_fingerprint, mesh_axes,
                                   plan_fingerprint)
-from repro.core.engine import PrivacyEngine
+from repro.core.engine import KeyProvenanceError, PrivacyEngine
 from repro.core.privacy import (PrivacyAccountant, clipping_sensitivity,
                                 rdp_subsampled_gaussian)
 from repro.core.strategies import (STRATEGIES, check_coverage,
@@ -23,7 +24,8 @@ from repro.core.tapper import (LayerMeta, Tapper, capture_backward, probe,
                                scan_with_taps)
 
 __all__ = [
-    "ClipPolicy", "DPConfig", "NormCfg", "ExecPlan", "PrivacyEngine",
+    "ClipPolicy", "DPConfig", "NormCfg", "ExecPlan", "KeyProvenanceError",
+    "PrivacyEngine", "code_fingerprint",
     "add_noise", "dp_gradient", "non_dp_gradient", "resolve_budgets",
     "resolve_microbatches", "PrivacyAccountant", "clipping_sensitivity",
     "rdp_subsampled_gaussian", "STRATEGIES", "check_coverage",

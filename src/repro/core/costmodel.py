@@ -62,9 +62,11 @@ a stale layout.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import json
 import math
+import pathlib
 from collections import OrderedDict
 from fnmatch import fnmatchcase
 from typing import Any, Callable, Mapping
@@ -257,7 +259,7 @@ class GroupPlan:
     sum_method: str                # stash | contrib | backward
 
 
-PLAN_FORMAT_VERSION = 3   # v3: clipping mode + per-layer fused flags
+PLAN_FORMAT_VERSION = 4   # v4: model-code hash folded into fingerprints
 
 _META_FIELDS = ("kind", "path", "param_key", "bias_key", "w_transposed",
                 "segmented", "scanned", "shared", "static")
@@ -951,18 +953,39 @@ def plan_cache_key(apply_fn, params, batch, opts: tuple) -> tuple:
     return (_fn_ident(apply_fn), _shape_sig(batch), _shape_sig(params), opts)
 
 
+@functools.lru_cache(maxsize=1)
+def code_fingerprint() -> str:
+    """Hash of the model/pipeline *sources* (``repro.models`` and
+    ``repro.core`` package files).  Folded into every plan fingerprint so
+    a plan-store entry produced by different code — a realization whose
+    cost or semantics changed since the plan was serialized — fails the
+    fingerprint check instead of silently executing under a stale plan."""
+    import repro.core
+    import repro.models
+    h = hashlib.sha1()
+    for pkg in (repro.core, repro.models):
+        # __path__ (not __file__) also covers namespace packages.
+        root = pathlib.Path(next(iter(pkg.__path__)))
+        for path in sorted(root.rglob("*.py")):
+            h.update(str(path.relative_to(root.parent)).encode())
+            h.update(path.read_bytes())
+    return h.hexdigest()[:12]
+
+
 def model_fingerprint(apply_fn, params, batch, opts: tuple = ()) -> str:
     """Cross-process-stable plan identity: model qualname + batch/param
-    shape signature + planner knobs.  Unlike the in-process cache key this
-    never uses ``id()``, so a plan exported from one process keys the same
-    model in another."""
+    shape signature + planner knobs + the model-code hash.  Unlike the
+    in-process cache key this never uses ``id()``, so a plan exported
+    from one process keys the same model in another — but only while the
+    sources match (see :func:`code_fingerprint`)."""
     owner = getattr(apply_fn, "__self__", None)
     if owner is not None:
         ident = type(owner).__module__ + "." + type(owner).__qualname__
     else:
         ident = (getattr(apply_fn, "__module__", "") + "."
                  + getattr(apply_fn, "__qualname__", "<fn>"))
-    payload = repr((ident, _shape_sig(batch), _shape_sig(params), opts))
+    payload = repr((ident, _shape_sig(batch), _shape_sig(params), opts,
+                    code_fingerprint()))
     return hashlib.sha1(payload.encode()).hexdigest()[:16]
 
 

@@ -58,6 +58,13 @@ def _spec_of(tree):
         lambda a: jax.ShapeDtypeStruct(tuple(a.shape), a.dtype), tree)
 
 
+class KeyProvenanceError(ValueError):
+    """An explicit PRNG key contradicts the engine's deterministic noise
+    stream (``fold_in(PRNGKey(run_seed), step)``).  Raised instead of
+    silently drawing from the wrong key: noise from an unaccounted stream
+    breaks the replay guarantee the accountant ledger depends on."""
+
+
 def _resolve_optimizer(optimizer) -> Callable:
     if callable(optimizer):
         return optimizer
@@ -117,6 +124,7 @@ class PrivacyEngine:
         self._params_spec = _spec_of(params)
         self._batch_spec = _spec_of(batch_spec)
         self._update_fn = _resolve_optimizer(optimizer)
+        self._optimizer_name = optimizer if isinstance(optimizer, str) else None
         self._lr = lr
         self._weight_decay = weight_decay
         if accountant is None and sampling_rate is not None:
@@ -264,6 +272,29 @@ class PrivacyEngine:
                     "(or construct the engine with run_seed= and pass "
                     "step=)")
             return jax.random.PRNGKey(0)
+        if step is not None:
+            # An explicit key together with step= claims to be the
+            # stream's key for that step — verify, don't trust.
+            if self._run_key is None:
+                raise KeyProvenanceError(
+                    f"key= passed with step={step} but the engine has no "
+                    f"noise stream (construct with run_seed=) — cannot "
+                    f"verify the key belongs to step {step}")
+            data = key
+            if isinstance(key, jax.core.Tracer):
+                raise KeyProvenanceError(
+                    f"key= passed with step={step} is a tracer — its "
+                    f"provenance cannot be checked; pass step= alone and "
+                    f"let the engine derive fold_in(run_key, {step})")
+            if jnp.issubdtype(jnp.asarray(key).dtype, jax.dtypes.prng_key):
+                data = jax.random.key_data(key)
+            if not np.array_equal(np.asarray(data),
+                                  np.asarray(self.noise_key(step))):
+                raise KeyProvenanceError(
+                    f"key= does not match the deterministic stream's key "
+                    f"for step={step} (fold_in(PRNGKey({self.run_seed}), "
+                    f"{step})) — replaying this step would draw different "
+                    f"noise than the accounted run")
         return key
 
     def noisy_grad(self, params, batch, key=None, denom: int | None = None,
@@ -366,8 +397,9 @@ class PrivacyEngine:
             self._budgets = resolve_budgets(
                 clip, self.dp.l2_clip, keys, observed=self._budget_q)
 
-    @functools.cached_property
-    def _jit_step(self):
+    def _step_fn(self):
+        """The raw (unjitted) step closure over the plan — what
+        ``private_step`` jits and what the static verifier traces."""
         cfg = dataclasses.replace(self.dp, microbatches=self.microbatches())
         plan = self._exec_plan()
         update_fn, lr, wd = self._update_fn, self._lr, self._weight_decay
@@ -382,22 +414,50 @@ class PrivacyEngine:
                                     weight_decay=wd)
             return params, opt, loss, aux
 
+        return step
+
+    def _step_shardings(self):
+        """(in_shardings, out_shardings) for the jitted step, or ``None``
+        off-mesh.  Batch over the data axes; params, optimizer state, PRNG
+        key, clip state, and every output replicated."""
         if self.mesh is None:
+            return None
+        from repro.launch.sharding import batch_sharding
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        repl = NamedSharding(self.mesh, P())
+        batch_sh = batch_sharding(self._batch_spec, self.mesh)
+        return (repl, repl, batch_sh, repl, repl), repl
+
+    @functools.cached_property
+    def _jit_step(self):
+        step = self._step_fn()
+        shardings = self._step_shardings()
+        if shardings is None:
             return jax.jit(step)
-        # Explicit shardings: batch over the data axes, everything else —
-        # params, optimizer state, PRNG key, clip state, and every output
-        # — replicated.  Per-example norms and the clipped sum reduce
+        # Explicit shardings: per-example norms and the clipped sum reduce
         # globally under SPMD (flat clip coefficients see the psum'd
         # global norm; per-layer norms are psum'd the same way, per
         # group), and the noise is drawn from the one replicated key, so
         # each device adds identical noise rather than independent
         # per-shard draws.
-        from repro.launch.sharding import batch_sharding
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        repl = NamedSharding(self.mesh, P())
-        batch_sh = batch_sharding(self._batch_spec, self.mesh)
-        return jax.jit(step, in_shardings=(repl, repl, batch_sh, repl, repl),
-                       out_shardings=repl)
+        return jax.jit(step, in_shardings=shardings[0],
+                       out_shardings=shardings[1])
+
+    def verify(self, *, opt=None, raise_on_error: bool = False,
+               coll_bytes_warn=None):
+        """Statically verify this engine's private step (no execution):
+        trace it to a jaxpr and check clip-before-reduce taint discipline,
+        noise calibration and key hygiene, sharding invariants, and
+        plan/graph consistency.  Returns a
+        :class:`repro.analysis.report.VerifyReport`; with
+        ``raise_on_error=True`` a failed report raises
+        :class:`repro.analysis.report.DPVerificationError` instead."""
+        from repro.analysis.verifier import verify_engine
+        report = verify_engine(self, opt=opt,
+                               coll_bytes_warn=coll_bytes_warn)
+        if raise_on_error:
+            report.raise_if_failed()
+        return report
 
     def private_step(self, params, opt, batch, key=None, *,
                      step: int | None = None):

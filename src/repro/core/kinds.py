@@ -24,10 +24,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.markers import tag
 from repro.core import costmodel
 from repro.core.tapper import STATS, LayerMeta
 
 F32 = jnp.float32
+
+
+def _realized(n, meta: LayerMeta, method: str):
+    """Mark a realized per-example norm so the static verifier can
+    cross-check the executed realization against the ExecPlan."""
+    return tag(n, kind="realization", layer_kind=meta.kind, method=method,
+               path="/".join(str(p) for p in meta.path))
+
+
+def _fused_marker(n, meta: LayerMeta, method: str):
+    return tag(n, kind="fused_impl", method=method,
+               path="/".join(str(p) for p in meta.path))
 
 
 def _ee(*args, **kw):
@@ -80,15 +93,16 @@ def dense_norm_sq(meta: LayerMeta, cap, dy, method: str = "auto"):
         # VMEM-tiled Gram kernel (TPU; interpret elsewhere) — the (T,T)
         # tiles never touch HBM.
         from repro.kernels import ops as kops
-        return kops.gram_norm(x, g, has_bias=bool(meta.bias_key))
+        return _realized(kops.gram_norm(x, g, has_bias=bool(meta.bias_key)),
+                         meta, "pallas")
     if method == "rank1":
         n = _ee("bti,bti->b", x, x) * _ee("bto,bto->b", g, g)
         if meta.bias_key:
             n = n + _ee("bto,bto->b", g, g)
-        return n
+        return _realized(n, meta, "rank1")
     if method == "stream":
         pe = dense_pe_grad(meta, cap, dy)
-        return _sumsq(pe)
+        return _realized(_sumsq(pe), meta, "stream")
     # gram, chunked over rows to bound the (B, T, T) intermediate
     chunk = costmodel.GRAM_CHUNK
     need_bias = bool(meta.bias_key)
@@ -102,7 +116,7 @@ def dense_norm_sq(meta: LayerMeta, cap, dy, method: str = "auto"):
         return n
 
     if T <= chunk:
-        return chunk_norm(x, g)
+        return _realized(chunk_norm(x, g), meta, "gram")
     n_chunks, rem = divmod(T, chunk)
     xs = x[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, Di)
     gs = g[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, Do)
@@ -115,7 +129,7 @@ def dense_norm_sq(meta: LayerMeta, cap, dy, method: str = "auto"):
                         (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(gs, 1, 0)))
     if rem:
         n = n + chunk_norm(x[:, n_chunks * chunk:], g[:, n_chunks * chunk:])
-    return n
+    return _realized(n, meta, "gram")
 
 
 def dense_norm_and_contrib(meta: LayerMeta, cap, dy, w, *,
@@ -140,12 +154,12 @@ def dense_norm_and_contrib(meta: LayerMeta, cap, dy, w, *,
         out = {meta.param_key: cw.T if meta.w_transposed else cw}
         if meta.bias_key:
             out[meta.bias_key] = cb
-        return n, out
+        return _fused_marker(n, meta, "pallas"), out
     pe = dense_pe_grad(meta, cap, dy)
     n = _sumsq(pe)
     contrib = jax.tree.map(
         lambda leaf: _ee("b...,b->...", leaf, w.astype(F32)), pe)
-    return n, contrib
+    return _fused_marker(n, meta, "stream"), contrib
 
 
 def dense_contrib(meta: LayerMeta, cap, dy, w):
@@ -215,7 +229,7 @@ def seg_dense_norm_sq(meta: LayerMeta, cap, dy, method: str = "auto"):
             return acc, None
 
     n, _ = jax.lax.scan(body, jnp.zeros((B,), F32), (x, g, seg))
-    return n
+    return _realized(n, meta, method)
 
 
 def seg_dense_contrib(meta: LayerMeta, cap, dy, w):
@@ -264,11 +278,12 @@ def embed_norm_sq(meta: LayerMeta, cap, dy, method: str = "segsum",
     if method == "auto":
         method = costmodel.embed_norm_method(T, g2.shape[-1], B, vocab)
     if method == "pe":
-        return _sumsq(embed_pe_grad(meta, cap, dy, vocab))
+        return _realized(_sumsq(embed_pe_grad(meta, cap, dy, vocab)),
+                         meta, "pe")
     if method == "gram":
         sy = _ee("btd,bsd->bts", g2, g2)
         m = (ids2[:, :, None] == ids2[:, None, :]).astype(F32)
-        return _ee("bts,bts->b", m, sy)
+        return _realized(_ee("bts,bts->b", m, sy), meta, "gram")
     # segsum
     order = jnp.argsort(ids2, axis=1)
     ids_s = jnp.take_along_axis(ids2, order, axis=1)
@@ -280,7 +295,8 @@ def embed_norm_sq(meta: LayerMeta, cap, dy, method: str = "segsum",
     summed = jax.vmap(
         lambda gg, ss: jax.ops.segment_sum(gg, ss, num_segments=T))(
         g_s, newseg)
-    return jnp.sum(jnp.square(summed), axis=(1, 2))
+    return _realized(jnp.sum(jnp.square(summed), axis=(1, 2)),
+                     meta, "segsum")
 
 
 def embed_contrib(meta: LayerMeta, cap, dy, w, vocab: int):
@@ -321,7 +337,8 @@ def scale_pe_grad(meta: LayerMeta, cap, dy, gshape):
 
 
 def scale_norm_sq(meta: LayerMeta, cap, dy, gshape):
-    return _sumsq(scale_pe_grad(meta, cap, dy, gshape))
+    return _realized(_sumsq(scale_pe_grad(meta, cap, dy, gshape)),
+                     meta, "pe")
 
 
 def scale_contrib(meta: LayerMeta, cap, dy, w, gshape):
@@ -394,9 +411,10 @@ def conv_norm_sq(meta: LayerMeta, cap, dy, impl: str = "fgc",
             T, cap["x"].shape[1], dy.shape[1], K, dy.shape[0],
             max(st.get("groups", 1), 1))
     if method in ("ghost", "pallas"):
-        return conv_norm_sq_ghost(meta, cap, dy,
-                                  use_pallas=(method == "pallas"))
-    return _sumsq(conv_pe_grad(meta, cap, dy, impl=impl))
+        return _realized(conv_norm_sq_ghost(
+            meta, cap, dy, use_pallas=(method == "pallas")), meta, method)
+    return _realized(_sumsq(conv_pe_grad(meta, cap, dy, impl=impl)),
+                     meta, "pe")
 
 
 def conv_norm_and_contrib(meta: LayerMeta, cap, dy, w, *,
@@ -485,7 +503,8 @@ def local_vjp_pe_grad(meta: LayerMeta, cap, dy, params_sub):
 
 
 def local_vjp_norm_sq(meta: LayerMeta, cap, dy, params_sub):
-    return _sumsq(_local_vjp_pe(meta, cap, dy, params_sub))
+    return _realized(_sumsq(_local_vjp_pe(meta, cap, dy, params_sub)),
+                     meta, "vjp")
 
 
 def local_vjp_contrib(meta: LayerMeta, cap, dy, w, params_sub):
@@ -548,7 +567,7 @@ def apply_kind(op: str, meta: LayerMeta, cap, dy, *, params_sub=None,
         # (exact cross terms), then take norms.
         pe = apply_kind("pe_grad", meta, cap, dy, params_sub=params_sub,
                         conv_impl=conv_impl)
-        return _sumsq(pe)
+        return _realized(_sumsq(pe), meta, "pe")
 
     if meta.scanned and meta.segmented:
         # Segmented (MoE) kinds natively reduce over their leading group

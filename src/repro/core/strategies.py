@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.analysis.markers import tag
 from repro.core import costmodel, kinds
 from repro.core.tapper import (STATS, Tapper, capture_backward, get_subtree,
                                probe, set_subtree)
@@ -156,15 +157,19 @@ def group_norms_from_captures(params, caps, dtaps, metas, *,
     B = _batch_size(metas, dtaps)
     keys, norms = [], []
 
+    def _tagged(n_sq, path, method="unplanned"):
+        return tag(n_sq, kind="group_norm", group=group_key_of(path),
+                   method=method, fused=False)
+
     for path, names in sorted(by_param.items()):
         keys.append(group_key_of(path))
         psub = get_subtree(params, path)
         if len(names) == 1:
             n = names[0]
-            norms.append(kinds.apply_kind(
+            norms.append(_tagged(kinds.apply_kind(
                 "norm_sq", metas[n], caps[n], dtaps[n], params_sub=psub,
                 norm_method=norm_method, conv_impl=conv_impl,
-                embed_method=embed_method, conv_norm=conv_norm))
+                embed_method=embed_method, conv_norm=conv_norm), path))
             continue
         ks = sorted((metas[n].kind, metas[n].w_transposed) for n in names)
         if ks == [("dense", True), ("embed", False)] and len(names) == 2:
@@ -177,8 +182,8 @@ def group_norms_from_captures(params, caps, dtaps, metas, *,
             n_g = n_g + kinds.apply_kind(
                 "norm_sq", metas[n_d], caps[n_d], dtaps[n_d], params_sub=psub,
                 norm_method=norm_method)
-            norms.append(n_g + kinds.tied_embed_head_cross(
-                caps[n_e], dtaps[n_e], caps[n_d], dtaps[n_d]))
+            norms.append(_tagged(n_g + kinds.tied_embed_head_cross(
+                caps[n_e], dtaps[n_e], caps[n_d], dtaps[n_d]), path, "tied"))
             continue
         # Generic exact fallback: materialize the summed per-example grad.
         pe_sum: dict = {}
@@ -187,7 +192,7 @@ def group_norms_from_captures(params, caps, dtaps, metas, *,
                                   params_sub=psub, conv_impl=conv_impl)
             for k, v in pe.items():
                 pe_sum[k] = pe_sum[k] + v if k in pe_sum else v
-        norms.append(kinds._sumsq(pe_sum))
+        norms.append(_tagged(kinds._sumsq(pe_sum), path, "pe"))
     if not norms:
         raise ValueError("no tapped layers")
     return tuple(keys), jnp.stack(norms)
@@ -210,15 +215,28 @@ def ghost_norms(apply_fn, params, batch, **kw):
 # clipped gradient sums (the DP-SGD core)
 
 
-def clip_coefficients(norms_sq, l2_clip, eps: float = 1e-12):
+def clip_coefficients(norms_sq, l2_clip, eps: float = 1e-12, *,
+                      mode: str = "flat"):
     norms = jnp.sqrt(norms_sq + eps)
-    return jnp.minimum(1.0, l2_clip / norms)
+    coef = jnp.minimum(1.0, l2_clip / norms)
+    # Structural marker the static verifier keys on: downstream of this
+    # tag, multiplying by ``coef`` IS the clip contraction.  A mutant
+    # that replaces the coefficients wholesale loses the tag — itself a
+    # finding.  ``mode`` records which policy produced them ("stale"
+    # when fed lagged norms).
+    params = {"kind": "clip_coef", "mode": mode}
+    try:
+        params["l2_clip"] = float(l2_clip)
+    except TypeError:  # traced bound: still tag, just without the value
+        pass
+    return tag(coef, **params)
 
 
 def per_layer_clip_coefficients(group_norms_sq, budgets, eps: float = 1e-12):
     """(G, B) coefficients: each group clipped against its own budget."""
     norms = jnp.sqrt(group_norms_sq + eps)
-    return jnp.minimum(1.0, budgets[:, None] / norms)
+    return tag(jnp.minimum(1.0, budgets[:, None] / norms),
+               kind="clip_coef", mode="per_layer")
 
 
 def _pe_tree_norms_sq(pe_grads):
@@ -328,7 +346,8 @@ def clipped_grad_sum_detailed(apply_fn, params, batch, *, l2_clip: float,
         def weight_of(meta):
             return coef[gi_of[group_key_of(meta.path)]]
     elif mode == "stale":
-        coef = lax.stop_gradient(clip_coefficients(prev_norms_sq, l2_clip))
+        coef = lax.stop_gradient(
+            clip_coefficients(prev_norms_sq, l2_clip, mode="stale"))
         detail = _flat_detail(coef)
 
         def weight_of(meta):
@@ -391,6 +410,14 @@ def _norm_kwargs(lp):
     return {}
 
 
+def _group_norm_tag(n_sq, g, method: str, fused: bool = False):
+    """Mark one plan group's realized (B,) squared norms for the static
+    verifier (kind=group_norm): which group, which realized method, and
+    whether a fused single-pass produced them."""
+    return tag(n_sq, kind="group_norm", group=group_key_of(g.path),
+               method=method, fused=fused)
+
+
 def _planned_group_norm(g, plan, metas, caps, dtaps, params, conv_impl,
                         stash):
     """Phase-1 norm of one plan group: (B,) squared norms, stashing any
@@ -403,10 +430,10 @@ def _planned_group_norm(g, plan, metas, caps, dtaps, params, conv_impl,
             pe = kinds.apply_kind("pe_grad", meta, caps[n], dtaps[n],
                                   params_sub=psub, conv_impl=conv_impl)
             stash[n] = pe
-            return kinds._sumsq(pe)
-        return kinds.apply_kind(
+            return _group_norm_tag(kinds._sumsq(pe), g, "stash")
+        return _group_norm_tag(kinds.apply_kind(
             "norm_sq", meta, caps[n], dtaps[n], params_sub=psub,
-            conv_impl=conv_impl, **_norm_kwargs(lp))
+            conv_impl=conv_impl, **_norm_kwargs(lp)), g, lp.norm_method)
     if g.norm_mode == "tied":
         n_e = next(n for n in g.members if metas[n].kind == "embed")
         n_d = next(n for n in g.members if metas[n].kind == "dense")
@@ -416,8 +443,8 @@ def _planned_group_norm(g, plan, metas, caps, dtaps, params, conv_impl,
         n_g = n_g + kinds.apply_kind(
             "norm_sq", metas[n_d], caps[n_d], dtaps[n_d],
             params_sub=psub, **_norm_kwargs(plan.layers[n_d]))
-        return n_g + kinds.tied_embed_head_cross(
-            caps[n_e], dtaps[n_e], caps[n_d], dtaps[n_d])
+        return _group_norm_tag(n_g + kinds.tied_embed_head_cross(
+            caps[n_e], dtaps[n_e], caps[n_d], dtaps[n_d]), g, "tied")
     # group_pe: exact generic fallback, materialized once
     pe_sum: dict = {}
     for n in g.members:
@@ -427,7 +454,7 @@ def _planned_group_norm(g, plan, metas, caps, dtaps, params, conv_impl,
             pe_sum[k] = pe_sum[k] + v if k in pe_sum else v
     if g.sum_method == "stash":
         stash[g.path] = pe_sum
-    return kinds._sumsq(pe_sum)
+    return _group_norm_tag(kinds._sumsq(pe_sum), g, "pe")
 
 
 def _weighted_stash_sum(pe, w):
@@ -451,19 +478,19 @@ def _stale_group_norm_contrib(g, plan, metas, caps, dtaps, params, coef,
                 meta, caps[n], dtaps[n], weights=coef, params_sub=psub,
                 fused=True, conv_impl=conv_impl, **_norm_kwargs(lp))
             _accumulate_param_grads(acc, g.path, contrib)
-            return n_g
+            return _group_norm_tag(n_g, g, lp.norm_method, fused=True)
         if lp.stash:
             pe = kinds.apply_kind("pe_grad", meta, caps[n], dtaps[n],
                                   params_sub=psub, conv_impl=conv_impl)
             _accumulate_param_grads(acc, g.path, _weighted_stash_sum(pe, coef))
-            return kinds._sumsq(pe)
+            return _group_norm_tag(kinds._sumsq(pe), g, "stash")
         n_g = kinds.apply_kind(
             "norm_sq", meta, caps[n], dtaps[n], params_sub=psub,
             conv_impl=conv_impl, **_norm_kwargs(lp))
         _accumulate_param_grads(acc, g.path, kinds.apply_kind(
             "contrib", meta, caps[n], dtaps[n], params_sub=psub,
             weights=coef, conv_impl=conv_impl))
-        return n_g
+        return _group_norm_tag(n_g, g, lp.norm_method)
     if g.norm_mode == "tied":
         stash: dict = {}
         n_g = _planned_group_norm(g, plan, metas, caps, dtaps, params,
@@ -481,7 +508,7 @@ def _stale_group_norm_contrib(g, plan, metas, caps, dtaps, params, coef,
         for k, v in pe.items():
             pe_sum[k] = pe_sum[k] + v if k in pe_sum else v
     _accumulate_param_grads(acc, g.path, _weighted_stash_sum(pe_sum, coef))
-    return kinds._sumsq(pe_sum)
+    return _group_norm_tag(kinds._sumsq(pe_sum), g, "pe")
 
 
 def planned_clipped_sum(apply_fn, params, batch, plan, *, l2_clip: float,
@@ -535,7 +562,8 @@ def planned_clipped_sum(apply_fn, params, batch, plan, *, l2_clip: float,
     if mode == "stale":
         if prev_norms_sq is None:
             raise ValueError("stale clipping needs prev_norms_sq")
-        coef = lax.stop_gradient(clip_coefficients(prev_norms_sq, l2_clip))
+        coef = lax.stop_gradient(
+            clip_coefficients(prev_norms_sq, l2_clip, mode="stale"))
         acc: dict = {}
         total = 0.0
         for g in plan.groups:

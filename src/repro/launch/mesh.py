@@ -43,16 +43,22 @@ def force_host_device_count_for(argv):
     first use)."""
     if "XLA_FLAGS" in os.environ:
         return
-    spec = None
+    specs = []
     for i, a in enumerate(argv):
         if a.startswith("--mesh="):
-            spec = a.split("=", 1)[1]
-        elif a == "--mesh" and i + 1 < len(argv):
-            spec = argv[i + 1]
-    if not spec:
+            specs.append(a.split("=", 1)[1])
+        elif a == "--mesh":
+            # Multi-valued form (dpcheck lanes): consume every value up
+            # to the next flag; the host must cover the *largest* lane.
+            j = i + 1
+            while j < len(argv) and not argv[j].startswith("--"):
+                specs.append(argv[j])
+                j += 1
+    n = max((math.prod(int(p.split(":")[1]) for p in s.split(",")
+                       if ":" in p)
+             for s in specs), default=1)
+    if n <= 1:
         return
-    n = math.prod(int(p.split(":")[1]) for p in spec.split(",")
-                  if ":" in p)
     os.environ["XLA_FLAGS"] = \
         f"--xla_force_host_platform_device_count={n}"
 

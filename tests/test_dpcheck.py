@@ -1,0 +1,252 @@
+"""Static DP verification (repro.analysis) — the verifier's own tests.
+
+Three groups:
+
+* **Clean lanes** — ``engine.verify()`` returns a clean report for the
+  real reduced alexnet across every clip mode, single-device and (on a
+  forced 8-device host) sharded.  These are the false-positive guard:
+  the verifier must accept the code we actually ship.
+* **Mutation harness** — the false-negative guard.  Each test installs
+  a classic DP-SGD bug (drop the clip, reuse a noise key, add noise
+  twice, reduce-before-clip, bf16 norms) by patching the real
+  implementation, re-traces, and asserts the verifier flags it with the
+  specific finding code.  A verifier that misses any of these is worse
+  than no verifier: it certifies broken privacy.
+* **Key provenance** — ``_check_key`` must reject an explicit ``key=``
+  whose provenance contradicts ``step=`` (raising
+  :class:`KeyProvenanceError`), since replaying a step with foreign
+  noise breaks the deterministic-replay accounting argument.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.clipping as clipping
+import repro.core.engine as engine_mod
+import repro.core.kinds as kinds
+import repro.core.strategies as strategies
+from repro.configs import get_config
+from repro.core import (ClipPolicy, DPConfig, KeyProvenanceError,
+                        PrivacyEngine, costmodel)
+from repro.core.tapper import Tapper
+from repro.launch.train import make_batch_fn
+from repro.models.registry import build_model
+
+needs_8_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+CLIP_MODES = ["flat", "per_layer", "stale"]
+
+
+@pytest.fixture(autouse=True)
+def _fresh_plans():
+    # Mutants change what the traced step looks like; a cached plan from
+    # a previous (unmutated) trace would mask or fabricate mismatches.
+    costmodel.clear_plan_cache()
+    yield
+    costmodel.clear_plan_cache()
+
+
+def _engine(mode="flat", mesh=None, run_seed=0, noise=0.8):
+    cfg = get_config("alexnet").reduced()
+    model = build_model(cfg)
+    params0, _ = model.init(jax.random.PRNGKey(0))
+    dpc = DPConfig(l2_clip=1.0, noise_multiplier=noise, strategy="auto",
+                   clipping=ClipPolicy(mode=mode))
+    return PrivacyEngine(model.apply, params0,
+                         make_batch_fn(cfg, 8, 64)(0), dp=dpc,
+                         optimizer="adamw", lr=1e-3, mesh=mesh,
+                         run_seed=run_seed)
+
+
+def _codes(report):
+    return sorted({f.code for f in report.errors})
+
+
+# ---------------------------------------------------------------------------
+# Clean lanes: no false positives on the shipped implementation.
+
+
+@pytest.mark.parametrize("mode", CLIP_MODES)
+def test_clean_lane_single_device(mode):
+    report = _engine(mode).verify()
+    assert report.ok, report.summary()
+    assert not report.warnings, report.summary()
+    # Every pass actually ran (a pass that silently skipped proves
+    # nothing).
+    for section in ("taint", "noise", "sharding", "plan"):
+        assert section in report.checked
+
+
+@needs_8_devices
+@pytest.mark.parametrize("mode", CLIP_MODES)
+def test_clean_lane_data8(mode):
+    from repro.launch.mesh import make_mesh_from_spec
+    report = _engine(mode, mesh=make_mesh_from_spec("data:8")).verify()
+    assert report.ok, report.summary()
+    assert not report.warnings, report.summary()
+
+
+def test_verify_report_surface():
+    report = _engine().verify()
+    assert "PASS" in report.summary()
+    # Info-level notes (conservative-fallback disclosures) are fine;
+    # anything stronger is not.
+    assert report.errors == [] and report.warnings == []
+    # raise_on_error is a no-op on a clean report...
+    _engine().verify(raise_on_error=True)
+
+
+# ---------------------------------------------------------------------------
+# Mutation harness: classic DP bugs must be flagged.
+
+
+def _verify_mutated(monkeypatch, patches, mode="flat"):
+    for obj, attr, val in patches:
+        monkeypatch.setattr(obj, attr, val)
+    costmodel.clear_plan_cache()
+    return _engine(mode).verify()
+
+
+def test_mutant_dropped_clip(monkeypatch):
+    def no_clip(norms_sq, l2_clip, eps=1e-12, *, mode="flat"):
+        return jnp.ones_like(norms_sq)
+
+    report = _verify_mutated(
+        monkeypatch, [(strategies, "clip_coefficients", no_clip)])
+    codes = _codes(report)
+    assert "clip_missing" in codes, codes
+    assert "unclipped_batch_reduction" in codes, codes
+
+
+def test_mutant_key_reuse(monkeypatch):
+    def reuse_key(grad_sum, key, noise_multiplier, l2_clip):
+        if noise_multiplier == 0.0:
+            return grad_sum
+        leaves, treedef = jax.tree.flatten(grad_sum)
+        sigma = noise_multiplier * l2_clip
+        noisy = [(g.astype(jnp.float32)
+                  + sigma * jax.random.normal(key, g.shape, jnp.float32)
+                  ).astype(g.dtype) for g in leaves]
+        return jax.tree.unflatten(treedef, noisy)
+
+    report = _verify_mutated(
+        monkeypatch, [(clipping, "add_noise", reuse_key)])
+    assert "key_reuse" in _codes(report), _codes(report)
+
+
+def test_mutant_double_noise(monkeypatch):
+    orig = clipping.add_noise
+
+    def double_noise(grad_sum, key, noise_multiplier, l2_clip):
+        g1 = orig(grad_sum, key, noise_multiplier, l2_clip)
+        return orig(g1, jax.random.fold_in(key, 1), noise_multiplier,
+                    l2_clip)
+
+    report = _verify_mutated(
+        monkeypatch, [(clipping, "add_noise", double_noise)])
+    assert "noise_duplicated" in _codes(report), _codes(report)
+
+
+def test_mutant_reduce_before_clip(monkeypatch):
+    # The textbook bug: clip the *mean* gradient by its global norm
+    # instead of clipping each example's gradient before summing.
+    # Sensitivity is unbounded; the verifier must see the batch-axis
+    # reduction happen with no per-example clip on its history.
+    def mean_then_scale(apply_fn, params, batch, *, cfg, key=None,
+                        denom=None, plan=None, clip_state=None):
+        def mean_loss(p):
+            return jnp.mean(apply_fn(p, batch, Tapper()))
+        loss, grad = jax.value_and_grad(mean_loss)(params)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                             for g in jax.tree.leaves(grad)))
+        scale = jnp.minimum(1.0, cfg.l2_clip / (gnorm + 1e-12))
+        grad = jax.tree.map(lambda g: g * scale, grad)
+        grad = clipping.add_noise(grad, key, cfg.noise_multiplier,
+                                  cfg.l2_clip)
+        return loss, grad, {"clip_fraction": jnp.zeros(())}
+
+    report = _verify_mutated(
+        monkeypatch, [(engine_mod, "dp_gradient", mean_then_scale)])
+    codes = _codes(report)
+    assert "unclipped_batch_reduction" in codes, codes
+    assert "clip_missing" in codes, codes
+
+
+def test_mutant_bf16_norms(monkeypatch):
+    orig = kinds.dense_norm_sq
+
+    def bf16_norms(meta, cap, dy, method="auto"):
+        return orig(meta, cap, dy, method=method).astype(jnp.bfloat16)
+
+    report = _verify_mutated(
+        monkeypatch, [(kinds, "dense_norm_sq", bf16_norms)])
+    assert "norm_low_precision" in _codes(report), _codes(report)
+
+
+def test_mutant_raises_with_raise_on_error(monkeypatch):
+    from repro.analysis import DPVerificationError
+
+    def no_clip(norms_sq, l2_clip, eps=1e-12, *, mode="flat"):
+        return jnp.ones_like(norms_sq)
+
+    monkeypatch.setattr(strategies, "clip_coefficients", no_clip)
+    costmodel.clear_plan_cache()
+    with pytest.raises(DPVerificationError, match="clip"):
+        _engine().verify(raise_on_error=True)
+
+
+# ---------------------------------------------------------------------------
+# Key provenance: explicit key= must match the stream's key for step=.
+
+
+def test_check_key_accepts_stream_key():
+    eng = _engine()
+    k = eng.noise_key(7)
+    out = eng._check_key(k, step=7)
+    assert np.array_equal(np.asarray(out), np.asarray(k))
+
+
+def test_check_key_rejects_wrong_step():
+    eng = _engine()
+    with pytest.raises(KeyProvenanceError, match="does not match"):
+        eng._check_key(eng.noise_key(7), step=8)
+
+
+def test_check_key_rejects_foreign_key():
+    eng = _engine()
+    with pytest.raises(KeyProvenanceError, match="does not match"):
+        eng._check_key(jax.random.PRNGKey(12345), step=0)
+
+
+def test_check_key_accepts_typed_stream_key():
+    eng = _engine()
+    typed = jax.random.wrap_key_data(jnp.asarray(eng.noise_key(3)))
+    out = eng._check_key(typed, step=3)
+    assert out is typed
+
+
+def test_check_key_requires_stream_for_step_claims():
+    eng = _engine(run_seed=None)
+    with pytest.raises(KeyProvenanceError, match="no\\s+noise stream"):
+        eng._check_key(jax.random.PRNGKey(0), step=4)
+
+
+def test_check_key_rejects_tracer_key():
+    eng = _engine()
+
+    @jax.jit
+    def traced(k):
+        return eng._check_key(k, step=2)
+
+    with pytest.raises(KeyProvenanceError, match="tracer"):
+        traced(eng.noise_key(2))
+
+
+def test_key_provenance_error_is_value_error():
+    # Pre-existing callers catch ValueError from _check_key; the named
+    # subclass must not break them.
+    assert issubclass(KeyProvenanceError, ValueError)
