@@ -5,8 +5,30 @@ Wall time on CPU compares the *XLA lowerings*; the Pallas kernels target
 TPU (here they run in interpret mode, which measures nothing useful), so
 the kernel's value is reported analytically: HBM bytes touched by the XLA
 chunked-gram path vs the fused VMEM-tiled kernel.
+
+``--calibrate-only`` skips the comparative benchmark and runs the
+measured-cost harness (repro.calibrate) instead: flop rate, HBM and
+collective bandwidth, plus the pe_conv_grad VMEM_BUDGET sweep.  The
+resulting calibration JSON is what ``launch/train.py --calibration``,
+``launch/dryrun.py --calibration`` and ``launch/serve.py --calibration``
+pre-register, and the sweep winners are merged into BENCH_strategies.json
+under the ``kernels@calibration`` key so the benchmark record carries the
+measured tile choices alongside the strategy timings.
+
+    PYTHONPATH=src python -m benchmarks.kernels_bench --calibrate-only \
+        --calibration-out results/calibration.json [--mesh data:8] [--quick]
 """
 from __future__ import annotations
+
+import json
+import os
+import sys
+
+if __name__ == "__main__":
+    # A --mesh data:N calibration on a CPU host needs N devices before
+    # the jax backend initializes.
+    from repro.launch.mesh import force_host_device_count_for
+    force_host_device_count_for(sys.argv)
 
 import numpy as np
 import jax
@@ -80,5 +102,72 @@ def run():
              f"autotuned_bd={bd}_of_D{D}")
 
 
+def calibrate_only(calibration_out: str = "results/calibration.json",
+                   mesh_spec: str | None = None, quick: bool = False,
+                   bench_out: str = "BENCH_strategies.json") -> dict:
+    """Run the measurement harness, persist the calibration JSON, and
+    merge the kernel-sweep winners into the strategy benchmark record."""
+    from repro import calibrate
+    from repro.launch.mesh import make_mesh_from_spec
+
+    mesh = make_mesh_from_spec(mesh_spec) if mesh_spec else None
+    calib = calibrate.measure(mesh, quick=quick)
+    os.makedirs(os.path.dirname(calibration_out) or ".", exist_ok=True)
+    calibrate.save_calibration(calibration_out, calib)
+    emit("kernels/calibration/flops_per_second", 0.0,
+         f"{calib.flops_per_second:.3e}")
+    emit("kernels/calibration/hbm_bytes_per_second", 0.0,
+         f"{calib.hbm_bytes_per_second:.3e}")
+    for axis, bw in sorted(calib.collective_bytes_per_second.items()):
+        emit(f"kernels/calibration/collective/{axis}", 0.0, f"{bw:.3e}")
+    pe = calib.kernels.get("pe_conv_grad", {})
+    if pe:
+        emit("kernels/calibration/pe_conv_vmem_budget", 0.0,
+             f"winner={pe['vmem_budget']}_bd={pe['bd']}")
+
+    results = {}
+    if os.path.exists(bench_out):
+        results = json.load(open(bench_out))
+    results["kernels@calibration"] = {
+        "hardware": calib.hardware,
+        "digest": calib.digest(),
+        "calibration_path": calibration_out,
+        "flops_per_second": calib.flops_per_second,
+        "hbm_bytes_per_second": calib.hbm_bytes_per_second,
+        "collective_bytes_per_second": dict(
+            calib.collective_bytes_per_second),
+        "kernel_sweeps": {k: dict(v) for k, v in calib.kernels.items()},
+    }
+    with open(bench_out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"calibration {calib.digest()} -> {calibration_out} "
+          f"(sweep winners merged into {bench_out})", flush=True)
+    return results
+
+
 if __name__ == "__main__":
-    run()
+    argv = sys.argv[1:]
+    cal_only, out_calib, spec, quick, rest, i = \
+        False, "results/calibration.json", None, False, [], 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--calibrate-only":
+            cal_only, i = True, i + 1
+        elif a == "--calibration-out":
+            out_calib, i = argv[i + 1], i + 2
+        elif a.startswith("--calibration-out="):
+            out_calib, i = a.split("=", 1)[1], i + 1
+        elif a == "--mesh":
+            spec, i = argv[i + 1], i + 2
+        elif a.startswith("--mesh="):
+            spec, i = a.split("=", 1)[1], i + 1
+        elif a == "--quick":
+            quick, i = True, i + 1
+        else:
+            rest.append(a)
+            i += 1
+    if cal_only:
+        calibrate_only(out_calib, spec, quick,
+                       rest[0] if rest else "BENCH_strategies.json")
+    else:
+        run()

@@ -186,19 +186,38 @@ def run_clip_modes(out_path: str = "BENCH_strategies.json") -> dict:
 MESH_CONFIGS = ("alexnet", "llama32_1b")
 
 
-def run_mesh(spec: str, out_path: str = "BENCH_strategies.json") -> dict:
+def run_mesh(spec: str, out_path: str = "BENCH_strategies.json",
+             calibration: str | None = None) -> dict:
     """Sharded-engine benchmark: auto planned with the mesh (collective-
     aware costs + explicit NamedShardings) vs auto planned without, same
     global batch.  Entries merge into the strategy benchmark's JSON under
-    ``{config}@{spec}`` keys."""
+    ``{config}@{spec}`` keys.
+
+    Each config then closes the calibration loop: the harness measures
+    the wire on this mesh, the observed ``auto_mesh`` step is folded back
+    via ``Calibration.retimed``, the engine re-plans under the measured
+    constants, and the record carries the planner's calibrated verdict —
+    either the plan flips to something faster, or the cost model proves
+    unsharded right and the apparent "regression" was priced fiction from
+    the analytic wire constant.  ``--calibration PATH`` pre-registers a
+    saved blob (e.g. from ``kernels_bench --calibrate-only``) so the
+    *initial* mesh plan is already calibrated."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro import calibrate
     from repro.core import costmodel
     from repro.launch.mesh import make_mesh_from_spec
     from repro.launch.sharding import batch_sharding
 
     mesh = make_mesh_from_spec(spec)
-    d = costmodel.mesh_data_size(costmodel.mesh_axes(mesh))
+    axes = costmodel.mesh_axes(mesh)
+    d = costmodel.mesh_data_size(axes)
+    if calibration:
+        calib = calibrate.load_or_fallback(calibration, mesh=axes)
+        if calib is not None:
+            calibrate.register(calib)
+            print(f"[calibrate] registered {calib.digest()} "
+                  f"(source={calib.source})", flush=True)
     results = {}
     if os.path.exists(out_path):
         results = json.load(open(out_path))
@@ -244,6 +263,53 @@ def run_mesh(spec: str, out_path: str = "BENCH_strategies.json") -> dict:
         emit(f"strategies/{key}/auto_mesh", times["auto_mesh"],
              f"ratio={results[key]['mesh_vs_nomesh']:.3f} "
              f"flips={len(flips)}")
+
+        # --- close the calibration loop: measure the wire, fold the
+        # observed auto_mesh step back into the calibration, re-plan
+        # under the measured constants, and record the verdict.
+        calib0 = calibrate.lookup(axes)
+        if calib0 is None:
+            calib0 = calibrate.measure(mesh, quick=True)
+        pred_s = costmodel.predicted_step_seconds(p1, calib0)
+        calib1 = calib0.retimed(predicted_s=pred_s,
+                                measured_s=times["auto_mesh"] / 1e6,
+                                coll_bytes=p1.total_coll_bytes)
+        calibrate.register(calib1)
+        eng2 = PrivacyEngine(model.apply, params, batch,
+                             dp=DPConfig(l2_clip=1.0, strategy="auto"),
+                             mesh=mesh, calibration=calib1)
+        p2 = eng2.plan()
+        verdict = costmodel.planner_verdict(p2, p0, calib1)
+        plan_changed = p2.describe() != p1.describe()
+        if plan_changed:
+            f2 = jax.jit(lambda p, b, _e=eng2: _e.noisy_grad(p, b)[:2],
+                         in_shardings=(repl, bsh), out_shardings=repl)
+            t2 = time_fn(f2, params, batch, warmup=2, iters=3,
+                         reduce="min")
+        else:
+            t2 = times["auto_mesh"]
+        ratio_cal = t2 / times["auto"]
+        results[key].update({
+            "calibration": calib1.digest(),
+            "planner_verdict": verdict,
+            "calibrated_plan_changed": plan_changed,
+            "times_us_calibrated": t2,
+            "mesh_vs_nomesh_calibrated": ratio_cal,
+            "predicted_step_s": {
+                "auto": costmodel.predicted_step_seconds(p0, calib1),
+                "auto_mesh": costmodel.predicted_step_seconds(p2, calib1),
+            },
+            # only a real regression if the calibrated planner still
+            # claims sharded wins while the measurement disagrees
+            "regression": verdict == "sharded" and ratio_cal > 1.0,
+        })
+        emit(f"strategies/{key}/calibrated", t2,
+             f"verdict={verdict} ratio={ratio_cal:.3f} "
+             f"plan_changed={plan_changed} calib={calib1.digest()}")
+        if results[key]["regression"]:
+            print(f"WARNING: calibrated planner claims sharded wins on "
+                  f"{key} but measurement disagrees "
+                  f"(ratio {ratio_cal:.3f})", flush=True)
     with open(out_path, "w") as f:
         json.dump(results, f, indent=1)
     return results
@@ -251,7 +317,7 @@ def run_mesh(spec: str, out_path: str = "BENCH_strategies.json") -> dict:
 
 if __name__ == "__main__":
     argv = sys.argv[1:]
-    spec, clip_modes, rest, i = None, False, [], 0
+    spec, clip_modes, calib_path, rest, i = None, False, None, [], 0
     while i < len(argv):
         a = argv[i]
         if a == "--mesh":
@@ -261,6 +327,10 @@ if __name__ == "__main__":
             spec, i = argv[i + 1], i + 2
         elif a.startswith("--mesh="):
             spec, i = a.split("=", 1)[1], i + 1
+        elif a == "--calibration":
+            calib_path, i = argv[i + 1], i + 2
+        elif a.startswith("--calibration="):
+            calib_path, i = a.split("=", 1)[1], i + 1
         elif a == "--clip-modes":
             clip_modes, i = True, i + 1
         else:
@@ -268,7 +338,7 @@ if __name__ == "__main__":
             i += 1
     out = rest[0] if rest else "BENCH_strategies.json"
     if spec:
-        run_mesh(spec, out)
+        run_mesh(spec, out, calibration=calib_path)
     elif clip_modes:
         run_clip_modes(out)
     else:

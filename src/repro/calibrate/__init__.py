@@ -1,0 +1,53 @@
+"""Measured-cost calibration: the planner trusts the hardware.
+
+``repro.calibrate`` closes the loop the analytic cost model leaves open:
+
+  * :mod:`~repro.calibrate.harness` measures FLOP rate, HBM bandwidth,
+    per-mesh-axis collective bandwidth, and the Pallas kernel sweeps on
+    the live hardware;
+  * :mod:`~repro.calibrate.table` holds the validated, serializable
+    :class:`Calibration` result and the process-wide registry the cost
+    model consults;
+  * :func:`load_or_fallback` / :func:`get_or_measure` are the soft entry
+    points engines and CLIs use — a bad blob degrades to the analytic
+    constants with a named :class:`CalibrationFallbackWarning`, never a
+    crash, while the strict loaders in ``table`` never downgrade.
+"""
+from __future__ import annotations
+
+import warnings
+
+from repro.calibrate.table import (  # noqa: F401  (public re-exports)
+    CALIBRATION_FORMAT_VERSION, Calibration, CalibrationError,
+    CalibrationFallbackWarning, CalibrationFormatError,
+    CalibrationHardwareMismatch, CalibrationMeshMismatch,
+    CalibrationValueError, clear_registry, hardware_signature, injected,
+    load_calibration, lookup, register, registered, save_calibration)
+from repro.calibrate.harness import measure  # noqa: F401
+
+
+def load_or_fallback(path: str, *, mesh=None,
+                     expect_hardware: bool = True):
+    """Load + validate a stored calibration; on *any* failure (missing
+    file, truncated blob, wrong hardware/mesh, bad rates) emit a named
+    :class:`CalibrationFallbackWarning` and return ``None`` so the
+    caller plans with the analytic constants.  The fail-safe entry
+    point: planning is degraded, never silently wrong."""
+    try:
+        return load_calibration(path, expect_hardware=expect_hardware,
+                                expect_mesh=mesh)
+    except (OSError, CalibrationError) as e:
+        warnings.warn(
+            f"calibration {path!r} unusable ({type(e).__name__}: {e}); "
+            f"falling back to analytic cost constants",
+            CalibrationFallbackWarning, stacklevel=2)
+        return None
+
+
+def get_or_measure(mesh=None, *, quick: bool = True) -> Calibration:
+    """The registered calibration for (live hardware, mesh), measuring
+    and registering one if absent — what first engine init uses."""
+    calib = lookup(mesh)
+    if calib is None:
+        calib = register(measure(mesh, quick=quick))
+    return calib

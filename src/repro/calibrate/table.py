@@ -1,0 +1,347 @@
+"""Calibration tables: measured hardware constants the planner trusts.
+
+A :class:`Calibration` is the persisted result of one
+:func:`repro.calibrate.harness.measure` run on a concrete
+(hardware, mesh) pair: the FLOP rate, HBM streaming bandwidth,
+per-mesh-axis collective bandwidth at the stash sizes plans actually
+move, and the Pallas kernel sweep winners (the ``pe_conv_grad``
+VMEM-budget sweep).  The cost model converts these into
+FLOP-equivalents-per-byte lookups that replace the analytic constants
+whenever a calibration is active (:mod:`repro.core.costmodel` keeps the
+analytic values as the documented fallback).
+
+Fail-safe discipline mirrors the plan store's: every deserialized blob
+is validated — wrong format or truncated payload, non-finite or
+non-positive rates, a hardware signature or mesh that does not match the
+live context — and each rejection raises a *named* error
+(:class:`CalibrationFormatError`, :class:`CalibrationValueError`,
+:class:`CalibrationHardwareMismatch`, :class:`CalibrationMeshMismatch`)
+rather than being silently planned against.  Soft consumers (engine
+init, CLI flags) catch :class:`CalibrationError`, emit a
+:class:`CalibrationFallbackWarning`, and plan with the analytic table;
+the strict loaders never downgrade an error to a warning themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+import time
+from typing import Any, Mapping
+
+import jax
+
+from repro.core import costmodel
+
+CALIBRATION_FORMAT_VERSION = 1
+
+
+class CalibrationError(ValueError):
+    """Base class for every calibration rejection (named subclasses)."""
+
+
+class CalibrationFormatError(CalibrationError):
+    """The blob is not a readable calibration: wrong/missing format
+    version, missing required fields, or a truncated/undecodable payload."""
+
+
+class CalibrationValueError(CalibrationError):
+    """A measured rate is unusable: NaN, infinite, zero, or negative.
+    Planning against such a value would divide by it (or price the wire
+    at nothing), so the blob is rejected whole."""
+
+
+class CalibrationHardwareMismatch(CalibrationError):
+    """The blob was measured on different hardware than this process
+    runs on; its bandwidths say nothing about the live machine."""
+
+
+class CalibrationMeshMismatch(CalibrationError):
+    """The blob was measured for a different mesh topology; its per-axis
+    collective bandwidths do not describe the topology being planned."""
+
+
+class CalibrationFallbackWarning(UserWarning):
+    """Emitted (never raised) when a soft consumer falls back to the
+    analytic constants because a calibration was absent or rejected."""
+
+
+def hardware_signature() -> str:
+    """Identity of the hardware this process runs on — what a stored
+    calibration is keyed to.  Backend + device kind + device count: a
+    calibration measured on another signature is rejected, not reused."""
+    devs = jax.devices()
+    kind = getattr(devs[0], "device_kind", "unknown")
+    return f"{jax.default_backend()}:{kind}:{len(devs)}"
+
+
+def _finite_pos(value, name: str) -> float:
+    try:
+        v = float(value)
+    except (TypeError, ValueError):
+        raise CalibrationValueError(
+            f"calibration field {name!r} is not a number: {value!r}")
+    if not math.isfinite(v) or v <= 0.0:
+        raise CalibrationValueError(
+            f"calibration field {name!r} must be a finite positive rate, "
+            f"got {value!r}")
+    return v
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Measured hardware constants for one (hardware, mesh) pair.
+
+    Rates are measured, not assumed:
+      * ``flops_per_second``             — dense matmul throughput;
+      * ``hbm_bytes_per_second``         — streaming read+write bandwidth;
+      * ``collective_bytes_per_second``  — per mesh-axis *wire* bandwidth
+        (ring bytes-on-the-wire per device per second, the same
+        convention the cost model charges), ``{}`` off-mesh;
+      * ``kernels``                      — per-kernel sweep results, e.g.
+        ``{"pe_conv_grad": {"vmem_budget": 4194304, ...}}``.
+
+    ``source`` records provenance: ``"measured"`` (harness),
+    ``"injected"`` (tests/benchmarks feeding known timings), or
+    ``"replan"`` (derived by the engine's mispredict loop from an
+    observed step time).
+    """
+
+    hardware: str
+    mesh: tuple = ()
+    flops_per_second: float = 0.0
+    hbm_bytes_per_second: float = 0.0
+    collective_bytes_per_second: dict = dataclasses.field(
+        default_factory=dict)
+    kernels: dict = dataclasses.field(default_factory=dict)
+    measured_at: float = 0.0
+    source: str = "measured"
+
+    def __post_init__(self):
+        object.__setattr__(self, "mesh", costmodel.mesh_axes(self.mesh))
+        _finite_pos(self.flops_per_second, "flops_per_second")
+        _finite_pos(self.hbm_bytes_per_second, "hbm_bytes_per_second")
+        for axis, bw in dict(self.collective_bytes_per_second).items():
+            _finite_pos(bw, f"collective_bytes_per_second[{axis!r}]")
+
+    # -- cost-model lookups ------------------------------------------------
+
+    def collective_flops_per_byte(self, axis: str | None = None) -> float:
+        """FLOP-equivalents of one collective byte on the wire.  With no
+        axis named, the *slowest* measured axis prices the traffic (the
+        conservative choice for plans that mix axes)."""
+        table = self.collective_bytes_per_second
+        if not table:
+            raise CalibrationValueError(
+                f"calibration {self.digest()} has no collective "
+                f"measurements (mesh {costmodel.format_mesh(self.mesh)})")
+        if axis is not None:
+            if axis not in table:
+                raise CalibrationMeshMismatch(
+                    f"calibration {self.digest()} has no measurement for "
+                    f"mesh axis {axis!r}; measured axes: {sorted(table)}")
+            return self.flops_per_second / table[axis]
+        return self.flops_per_second / min(table.values())
+
+    def hbm_flops_per_byte(self) -> float:
+        return self.flops_per_second / self.hbm_bytes_per_second
+
+    def seconds_for_flops(self, flops_equiv: float) -> float:
+        return float(flops_equiv) / self.flops_per_second
+
+    # -- identity / validation ---------------------------------------------
+
+    def digest(self) -> str:
+        """Content hash of the measured values — what plan fingerprints
+        fold in, so a plan built under different measured constants keys
+        (and fails safe) exactly like a plan built from different code."""
+        payload = dict(self.to_payload())
+        payload.pop("measured_at", None)   # identity is the values
+        return hashlib.sha1(
+            json.dumps(payload, sort_keys=True).encode()).hexdigest()[:12]
+
+    def validate_for(self, hardware: str | None = None, mesh=None):
+        """Reject this calibration for a live context it does not
+        describe, naming what differs."""
+        if hardware is not None and self.hardware != hardware:
+            raise CalibrationHardwareMismatch(
+                f"calibration {self.digest()} was measured on "
+                f"{self.hardware!r}, this process runs on {hardware!r}; "
+                f"re-calibrate on this hardware")
+        if mesh is not None:
+            ms = costmodel.mesh_axes(mesh)
+            if self.mesh != ms:
+                raise CalibrationMeshMismatch(
+                    f"calibration {self.digest()} was measured for mesh "
+                    f"{costmodel.format_mesh(self.mesh)}, this process "
+                    f"plans {costmodel.format_mesh(ms)}; re-calibrate "
+                    f"for this topology")
+
+    # -- serialization -----------------------------------------------------
+
+    def to_payload(self) -> dict:
+        return {
+            "format": CALIBRATION_FORMAT_VERSION,
+            "hardware": self.hardware,
+            "mesh": [[n, s] for n, s in self.mesh],
+            "flops_per_second": self.flops_per_second,
+            "hbm_bytes_per_second": self.hbm_bytes_per_second,
+            "collective_bytes_per_second":
+                dict(self.collective_bytes_per_second),
+            "kernels": self.kernels,
+            "measured_at": self.measured_at,
+            "source": self.source,
+        }
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_payload(), **kw)
+
+    @classmethod
+    def from_payload(cls, p: Any) -> "Calibration":
+        if not isinstance(p, Mapping):
+            raise CalibrationFormatError(
+                f"calibration payload is not a mapping: {type(p).__name__}")
+        if p.get("format") != CALIBRATION_FORMAT_VERSION:
+            raise CalibrationFormatError(
+                f"unsupported calibration format {p.get('format')!r} "
+                f"(this build reads {CALIBRATION_FORMAT_VERSION})")
+        required = ("hardware", "flops_per_second", "hbm_bytes_per_second",
+                    "collective_bytes_per_second")
+        missing = [k for k in required if k not in p]
+        if missing:
+            raise CalibrationFormatError(
+                f"calibration payload is missing fields {missing} "
+                f"(truncated or foreign blob)")
+        try:
+            return cls(
+                hardware=str(p["hardware"]),
+                mesh=tuple((str(n), int(s)) for n, s in p.get("mesh", [])),
+                flops_per_second=p["flops_per_second"],
+                hbm_bytes_per_second=p["hbm_bytes_per_second"],
+                collective_bytes_per_second={
+                    str(k): v
+                    for k, v in p["collective_bytes_per_second"].items()},
+                kernels=dict(p.get("kernels", {})),
+                measured_at=float(p.get("measured_at", 0.0)),
+                source=str(p.get("source", "measured")))
+        except CalibrationError:
+            raise
+        except (TypeError, ValueError, AttributeError) as e:
+            raise CalibrationFormatError(
+                f"malformed calibration payload: {e}") from e
+
+    @classmethod
+    def from_json(cls, s: str) -> "Calibration":
+        try:
+            payload = json.loads(s)
+        except json.JSONDecodeError as e:
+            raise CalibrationFormatError(
+                f"calibration blob is not valid JSON (truncated?): "
+                f"{e}") from e
+        return cls.from_payload(payload)
+
+    # -- derivation --------------------------------------------------------
+
+    def retimed(self, *, predicted_s: float, measured_s: float,
+                coll_bytes: float) -> "Calibration":
+        """A calibration updated so the cost model would have predicted
+        ``measured_s`` for the step it predicted ``predicted_s`` for —
+        the engine's mispredict feedback.  When the step moved collective
+        bytes, the gap is attributed to the wire (the term the analytic
+        model most mis-prices); otherwise the FLOP rate absorbs it.
+        Deterministic: a pure function of (self, predicted, measured)."""
+        predicted_s = _finite_pos(predicted_s, "predicted_s")
+        measured_s = _finite_pos(measured_s, "measured_s")
+        if coll_bytes > 0.0 and self.collective_bytes_per_second:
+            # Solve for the wire bandwidth that closes the gap, holding
+            # the compute terms fixed.  The compute share of the
+            # prediction is predicted_s minus the old wire share.
+            old_fpb = self.collective_flops_per_byte()
+            wire_s_old = self.seconds_for_flops(old_fpb * coll_bytes)
+            compute_s = max(predicted_s - wire_s_old, 1e-12)
+            wire_s_new = max(measured_s - compute_s, 1e-12)
+            scale = wire_s_old / wire_s_new if wire_s_new > 0 else 1.0
+            table = {axis: bw * scale for axis, bw
+                     in self.collective_bytes_per_second.items()}
+            return dataclasses.replace(
+                self, collective_bytes_per_second=table, source="replan",
+                measured_at=self.measured_at)
+        scale = predicted_s / measured_s
+        return dataclasses.replace(
+            self, flops_per_second=self.flops_per_second * scale,
+            source="replan", measured_at=self.measured_at)
+
+
+# ---------------------------------------------------------------------------
+# Process-wide registry: (hardware, mesh) -> Calibration.  The engine and
+# the cost model consult it when no calibration is passed explicitly;
+# load_plan_store() installs the calibrations persisted with a plan store.
+
+
+_REGISTRY: dict[tuple, Calibration] = {}
+
+
+def register(calib: Calibration) -> Calibration:
+    _REGISTRY[(calib.hardware, calib.mesh)] = calib
+    return calib
+
+
+def lookup(mesh=None, hardware: str | None = None) -> Calibration | None:
+    """The registered calibration for (live hardware, this mesh), or
+    ``None``.  Exact-mesh match only: a ``data:8`` calibration never
+    silently prices a ``data:4`` plan."""
+    hw = hardware if hardware is not None else hardware_signature()
+    return _REGISTRY.get((hw, costmodel.mesh_axes(mesh)))
+
+
+def registered() -> list:
+    return list(_REGISTRY.values())
+
+
+def clear_registry():
+    _REGISTRY.clear()
+
+
+def load_calibration(path: str, *, expect_hardware: bool = True,
+                     expect_mesh=None) -> Calibration:
+    """Strict file loader: parse, validate values, and check the blob
+    against the live context.  Raises named :class:`CalibrationError`
+    subclasses; never warns-and-continues (that is the caller's choice,
+    see :func:`repro.calibrate.load_or_fallback`)."""
+    with open(path) as f:
+        raw = f.read()
+    calib = Calibration.from_json(raw)
+    calib.validate_for(
+        hardware=hardware_signature() if expect_hardware else None,
+        mesh=expect_mesh)
+    return calib
+
+
+def save_calibration(path: str, calib: Calibration):
+    with open(path, "w") as f:
+        f.write(calib.to_json(indent=1))
+
+
+def injected(*, mesh=(), flops_per_second: float = 1e12,
+             hbm_bytes_per_second: float = 1e11,
+             collective_bytes_per_second=None,
+             kernels: dict | None = None,
+             hardware: str | None = None) -> Calibration:
+    """A synthetic calibration for tests/benchmarks: known rates on the
+    *live* hardware signature (so context validation passes), marked
+    ``source="injected"``.  ``collective_bytes_per_second`` may be a
+    single float (applied to every mesh axis) or a per-axis mapping."""
+    ms = costmodel.mesh_axes(mesh)
+    coll = collective_bytes_per_second
+    if coll is None:
+        coll = {}
+    if not isinstance(coll, Mapping):
+        coll = {name: float(coll) for name, _ in ms}
+    return Calibration(
+        hardware=hardware or hardware_signature(), mesh=ms,
+        flops_per_second=flops_per_second,
+        hbm_bytes_per_second=hbm_bytes_per_second,
+        collective_bytes_per_second=dict(coll),
+        kernels=dict(kernels or {}), measured_at=time.time(),
+        source="injected")

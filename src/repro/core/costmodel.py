@@ -83,19 +83,103 @@ BYTES = 4
 # contractions it shares with `contrib`; expressed as a multiple of the
 # total per-layer wgrad FLOPs (forward ≈ Σ wgrad, dx-chain ≈ Σ wgrad).
 BACKWARD_FIXED_FACTOR = 2.0
-# Interconnect cost of one collective byte, in FLOP-equivalents.  TPU
-# v5e: ~197 TFLOP/s bf16 against ~400 GB/s aggregate ICI per chip ≈ 500
-# FLOPs per byte on the wire; DCN-attached data parallelism is far worse.
-COLLECTIVE_FLOPS_PER_BYTE = 512.0
-# HBM cost of one byte, in FLOP-equivalents (TPU v5e: ~197 TFLOP/s bf16
-# against ~819 GB/s HBM ≈ 240; kept conservative).  Used to credit the
-# fused norm+contrib realizations available under stale-coefficient
-# clipping: the Gram tiles and the contribution accumulator share one
-# HBM read of the captures instead of two passes reading them twice.
-HBM_FLOPS_PER_BYTE = 128.0
+
+# --- BEGIN ANALYTIC FALLBACK -------------------------------------------
+# The documented fallback table: the ONLY place analytic bandwidth /
+# FLOP-rate constants live.  Planning uses resolve_cost_constants(),
+# which prefers a measured Calibration (repro.calibrate) for the live
+# (hardware, mesh) and falls back to these values when none is
+# registered.  CI greps that no magic `*_PER_BYTE = <digits>` constant
+# exists outside this block.
+#
+#   collective_flops_per_byte — interconnect cost of one collective byte
+#     in FLOP-equivalents.  TPU v5e: ~197 TFLOP/s bf16 against ~400 GB/s
+#     aggregate ICI per chip ≈ 500 FLOPs/byte on the wire; DCN-attached
+#     data parallelism is far worse.  BENCH_strategies.json shows this
+#     constant can be catastrophically wrong (alexnet@data:8) — which is
+#     exactly why measured calibration exists.
+#   hbm_flops_per_byte — HBM cost of one byte in FLOP-equivalents (TPU
+#     v5e: ~197 TFLOP/s bf16 against ~819 GB/s HBM ≈ 240; kept
+#     conservative).  Credits the fused norm+contrib realizations under
+#     stale-coefficient clipping: the Gram tiles and the contribution
+#     accumulator share one HBM read of the captures.
+#   flops_per_second — nominal device throughput used only to convert
+#     FLOP-equivalents into predicted seconds when no calibration is
+#     active (the mispredict loop needs a time unit).
+ANALYTIC_FALLBACK = {
+    "collective_flops_per_byte": 512.0,
+    "hbm_flops_per_byte": 128.0,
+    "flops_per_second": 197.0e12,
+}
+# --- END ANALYTIC FALLBACK ---------------------------------------------
+
+# Module-level aliases kept for callers/tests that reference the analytic
+# values by their historical names.
+COLLECTIVE_FLOPS_PER_BYTE = ANALYTIC_FALLBACK["collective_flops_per_byte"]
+HBM_FLOPS_PER_BYTE = ANALYTIC_FALLBACK["hbm_flops_per_byte"]
 # Mesh axes treated as pure data parallelism (batch-sharded); every other
 # axis is model parallelism.
 DATA_AXIS_NAMES = ("pod", "data", "batch")
+
+
+# ---------------------------------------------------------------------------
+# Cost constants: calibrated lookups with the analytic table as fallback.
+# Every cost term below prices through a CostConstants instance; the only
+# question is whether it came from a measured Calibration or from
+# ANALYTIC_FALLBACK.
+
+
+@dataclasses.dataclass(frozen=True)
+class CostConstants:
+    """The rates one planning pass prices against, plus provenance.
+    ``calibration`` is the Calibration digest ("" when analytic) — it is
+    folded into plan fingerprints so plans built under different measured
+    constants fail safe exactly like plans built from different code."""
+
+    collective_flops_per_byte: float
+    hbm_flops_per_byte: float
+    flops_per_second: float
+    source: str = "analytic"
+    calibration: str = ""
+
+
+ANALYTIC_CONSTANTS = CostConstants(
+    collective_flops_per_byte=ANALYTIC_FALLBACK["collective_flops_per_byte"],
+    hbm_flops_per_byte=ANALYTIC_FALLBACK["hbm_flops_per_byte"],
+    flops_per_second=ANALYTIC_FALLBACK["flops_per_second"])
+
+
+def _resolve_calibration(calibration, mesh):
+    """An explicit Calibration wins; ``None`` consults the registry for
+    (live hardware, mesh).  Imported lazily — repro.calibrate imports
+    this module."""
+    if calibration is not None:
+        return calibration
+    try:
+        from repro.calibrate import table as _ct
+    except ImportError:      # pragma: no cover - calibrate always ships
+        return None
+    return _ct.lookup(mesh)
+
+
+def resolve_cost_constants(calibration=None, mesh=None) -> CostConstants:
+    """The :class:`CostConstants` a planning pass for ``mesh`` should
+    price against: the given (or registered) calibration's measured
+    rates, or :data:`ANALYTIC_CONSTANTS`.  A calibration with no
+    collective measurements (e.g. measured off-mesh) keeps the analytic
+    wire price — it has nothing better to say about it."""
+    calib = _resolve_calibration(calibration, mesh)
+    if calib is None:
+        return ANALYTIC_CONSTANTS
+    if calib.collective_bytes_per_second:
+        coll = calib.collective_flops_per_byte()
+    else:
+        coll = ANALYTIC_FALLBACK["collective_flops_per_byte"]
+    return CostConstants(
+        collective_flops_per_byte=coll,
+        hbm_flops_per_byte=calib.hbm_flops_per_byte(),
+        flops_per_second=calib.flops_per_second,
+        source=calib.source, calibration=calib.digest())
 
 # contrib for a local_vjp layer replays the layer's VJP once *per
 # example* under vmap — for scan-based layers (SSM recurrences) the
@@ -259,7 +343,7 @@ class GroupPlan:
     sum_method: str                # stash | contrib | backward
 
 
-PLAN_FORMAT_VERSION = 4   # v4: model-code hash folded into fingerprints
+PLAN_FORMAT_VERSION = 5   # v5: calibration digest in fingerprints/payloads
 
 _META_FIELDS = ("kind", "path", "param_key", "bias_key", "w_transposed",
                 "segmented", "scanned", "shared", "static")
@@ -315,6 +399,7 @@ class ExecPlan:
     batch_sig: tuple = ()          # batch shape signature the plan was built on
     total_coll_bytes: float = 0.0  # per-device collective bytes per step
     clip_mode: str = "flat"        # flat | per_layer | stale (coefficient flow)
+    calibration: str = ""          # Calibration digest priced under ("" analytic)
     _anchor: Any = None            # pins apply_fn identity while cached
 
     def describe(self) -> str:
@@ -371,6 +456,10 @@ class ExecPlan:
         lines.append(
             f"mesh: {format_mesh(self.mesh)}; predicted collectives "
             f"{self.total_coll_bytes / 2**20:.2f} MB/step/device")
+        lines.append(
+            f"cost constants: measured calibration {self.calibration}"
+            if self.calibration else
+            "cost constants: analytic fallback (no calibration)")
         if self.fingerprint:
             lines.append(f"fingerprint: {self.fingerprint}")
         return "\n".join(lines)
@@ -390,6 +479,7 @@ class ExecPlan:
             "total_norm_flops": self.total_norm_flops,
             "total_contrib_flops": self.total_contrib_flops,
             "total_coll_bytes": self.total_coll_bytes,
+            "calibration": self.calibration,
             "capture_bytes": self.capture_bytes,
             "layers": {n: dataclasses.asdict(lp)
                        for n, lp in self.layers.items()},
@@ -436,7 +526,8 @@ class ExecPlan:
                    mesh=_retuple(p.get("mesh", [])),
                    batch_sig=_retuple(p.get("batch_sig", [])),
                    total_coll_bytes=p.get("total_coll_bytes", 0.0),
-                   clip_mode=p.get("clip_mode", "flat"))
+                   clip_mode=p.get("clip_mode", "flat"),
+                   calibration=p.get("calibration", ""))
 
     @classmethod
     def from_json(cls, s: str) -> "ExecPlan":
@@ -467,7 +558,8 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
                 mem_budget: int, vocab: int | None = None,
                 params_sub=None, mesh: tuple = (),
                 clip_mode: str = "flat",
-                clip_fused: bool = True) -> LayerPlan:
+                clip_fused: bool = True,
+                cc: CostConstants = ANALYTIC_CONSTANTS) -> LayerPlan:
     """Costs for one tap.  Stacked (scanned) applications multiply the
     per-application cost; shared stacked dense/scale layers fold the stack
     into the sequence axis first (matching kinds.apply_kind semantics).
@@ -499,7 +591,7 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
         # there is no cross-layer total to reduce before the sum phase.
         if clip_mode == "per_layer":
             return 0.0
-        return COLLECTIVE_FLOPS_PER_BYTE * B * BYTES * ring
+        return cc.collective_flops_per_byte * B * BYTES * ring
 
     def _fused_credit(read_bytes: float, cand_flops: float) -> float:
         # Stale coefficients are known entering the pass, so the Gram
@@ -511,12 +603,13 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
         # CPU/ref realization has no HBM read to save, and even on TPU
         # the read saving is second-order next to a FLOP gap).
         if clip_mode == "stale" and clip_fused:
-            return min(HBM_FLOPS_PER_BYTE * read_bytes, 0.05 * cand_flops)
+            return min(cc.hbm_flops_per_byte * read_bytes,
+                       0.05 * cand_flops)
         return 0.0
 
     def _move_cost(stash_bytes: float) -> float:
         # per-device per-example grads crossing the grad-sync ring
-        return COLLECTIVE_FLOPS_PER_BYTE * stash_bytes * ring
+        return cc.collective_flops_per_byte * stash_bytes * ring
 
     if meta.kind == "dense" and meta.segmented:
         x_shape = tuple(cap_sh["x"].shape)[k:]
@@ -750,7 +843,7 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
                    conv_norm: str = "auto",
                    mem_budget: int = STREAM_MEM_BUDGET,
                    overrides=None, mesh=None, clip_mode: str = "flat",
-                   clip_fused: bool = True) -> ExecPlan:
+                   clip_fused: bool = True, calibration=None) -> ExecPlan:
     """Build the per-layer plan from probed shapes.
 
     Fixed ``norm_method`` / ``embed_method`` / ``conv_norm`` override the
@@ -767,11 +860,17 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
     known coefficients make every contraction direct) and, with
     ``clip_fused``, credits and marks Gram-realized dense/conv layers
     for the fused single-pass ``gram_norm_fused`` norm+contrib.
+
+    ``calibration`` (a :class:`repro.calibrate.Calibration`, or ``None``
+    for the registered one) supplies measured cost constants; every
+    price below goes through the resolved :class:`CostConstants`, with
+    :data:`ANALYTIC_CONSTANTS` as the documented fallback.
     """
     overrides = normalize_overrides(overrides)
     ms = mesh_axes(mesh)
     d = mesh_data_size(ms)
     ring = _ring(d)
+    cc = resolve_cost_constants(calibration, ms)
     layers: dict[str, LayerPlan] = {}
     by_path: dict[tuple, list] = {}
     for name, meta in metas.items():
@@ -788,7 +887,7 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
             conv_norm=ov or conv_norm, mem_budget=mem_budget,
             vocab=_vocab_of(meta, params) if meta.kind == "embed" else None,
             params_sub=psub, mesh=ms, clip_mode=clip_mode,
-            clip_fused=clip_fused)
+            clip_fused=clip_fused, cc=cc)
         by_path.setdefault(meta.path, []).append(name)
 
     total_wgrad = sum(lp.wgrad_flops for lp in layers.values())
@@ -802,7 +901,7 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
     unique_pbytes = sum(max(layers[n].param_bytes for n in names)
                         for names in by_path.values())
     backward_cost = (BACKWARD_FIXED_FACTOR + 1.0) * total_wgrad \
-        + COLLECTIVE_FLOPS_PER_BYTE * ring * unique_pbytes
+        + cc.collective_flops_per_byte * ring * unique_pbytes
 
     groups: list[GroupPlan] = []
     for path, names in sorted(by_path.items()):
@@ -922,7 +1021,7 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
         total_norm_flops=sum(lp.norm_flops for lp in layers.values()),
         total_contrib_flops=sum(lp.contrib_flops for lp in layers.values()),
         tap_shapes=dict(tap_shapes), capture_bytes=capture_bytes,
-        mesh=ms, clip_mode=clip_mode,
+        mesh=ms, clip_mode=clip_mode, calibration=cc.calibration,
         total_coll_bytes=sum(lp.coll_bytes for lp in layers.values()))
 
 
@@ -1015,10 +1114,30 @@ def clear_plan_store():
     _PLAN_STORE.clear()
 
 
-def save_plan_store(path: str, plans, extra: dict | None = None):
-    """Write plans (+ optional extra metadata) as one JSON document."""
+def save_plan_store(path: str, plans, extra: dict | None = None,
+                    calibrations=None):
+    """Write plans (+ optional extra metadata) as one JSON document.
+
+    ``calibrations`` (iterable of ``repro.calibrate.Calibration``)
+    persists measured constants alongside the plans; ``None``
+    auto-collects every registered calibration whose digest some plan
+    was priced under, so a store written after calibrated planning
+    round-trips the constants it depends on."""
+    plans = list(plans)
+    if calibrations is None:
+        try:
+            from repro.calibrate import table as _ct
+        except ImportError:       # pragma: no cover - calibrate ships
+            calibrations = ()
+        else:
+            used = {p.calibration for p in plans if p.calibration}
+            calibrations = [c for c in _ct.registered()
+                            if c.digest() in used]
     doc = {"format": PLAN_FORMAT_VERSION,
            "plans": [p.to_payload() for p in plans]}
+    calibrations = list(calibrations)
+    if calibrations:
+        doc["calibrations"] = [c.to_payload() for c in calibrations]
     if extra:
         doc.update(extra)
     with open(path, "w") as f:
@@ -1026,9 +1145,17 @@ def save_plan_store(path: str, plans, extra: dict | None = None):
 
 
 def load_plan_store(path: str) -> int:
-    """Load a plan JSON document into the store; returns the plan count."""
+    """Load a plan JSON document into the store; returns the plan count.
+    Calibrations persisted with the store are validated (named
+    ``CalibrationError`` subclasses on tampered blobs — wrong rates are
+    rejected here; hardware/mesh validation happens at use) and
+    registered before the plans, so calibrated fingerprints resolve."""
     with open(path) as f:
         doc = json.load(f)
+    if isinstance(doc, dict) and doc.get("calibrations"):
+        from repro.calibrate import table as _ct
+        for cp in doc["calibrations"]:
+            _ct.register(_ct.Calibration.from_payload(cp))
     plans = doc["plans"] if isinstance(doc, dict) else doc
     for p in plans:
         register_plan(ExecPlan.from_payload(p))
@@ -1040,11 +1167,24 @@ def _sig_summary(sig) -> str:
 
 
 def check_plan_matches(plan: ExecPlan, *, fingerprint: str | None = None,
-                       mesh=None, batch_sig=None, clip_mode: str | None = None):
+                       mesh=None, batch_sig=None, clip_mode: str | None = None,
+                       calibration=None):
     """Validate a deserialized/injected plan against the live context,
     naming the offending field — mesh shape, batch shape, clipping mode,
-    or fingerprint — so a stale plan fails loudly instead of executing a
-    stale layout."""
+    calibration, or fingerprint — so a stale plan fails loudly instead
+    of executing a stale layout.  ``calibration`` may be a Calibration,
+    its digest string, or ``""`` to assert analytic constants."""
+    if calibration is not None:
+        want = (calibration if isinstance(calibration, str)
+                else calibration.digest())
+        if plan.calibration != want:
+            def _label(d):
+                return f"measured constants {d}" if d else "analytic constants"
+            raise ValueError(
+                f"stale ExecPlan: calibration mismatch — plan "
+                f"{plan.fingerprint or '<unfingerprinted>'} was priced "
+                f"under {_label(plan.calibration)}, this process plans "
+                f"under {_label(want)}; re-calibrate or re-plan")
     if clip_mode is not None and plan.clip_mode != clip_mode:
         raise ValueError(
             f"stale ExecPlan: clipping mode mismatch — plan "
@@ -1074,30 +1214,34 @@ def check_plan_matches(plan: ExecPlan, *, fingerprint: str | None = None,
 
 
 def _opts_tuple(norm_method, embed_method, conv_norm, mem_budget,
-                overrides, mesh, clip_mode="flat", clip_fused=True) -> tuple:
+                overrides, mesh, clip_mode="flat", clip_fused=True,
+                calibration=None) -> tuple:
+    ms = mesh_axes(mesh)
+    calib = _resolve_calibration(calibration, ms)
     return (norm_method, embed_method, conv_norm, mem_budget,
-            normalize_overrides(overrides), mesh_axes(mesh),
-            (str(clip_mode), bool(clip_fused)))
+            normalize_overrides(overrides), ms,
+            (str(clip_mode), bool(clip_fused)),
+            "" if calib is None else calib.digest())
 
 
 def plan_fingerprint(apply_fn, params, batch, *, norm_method: str = "auto",
                      embed_method: str = "auto", conv_norm: str = "auto",
                      mem_budget: int = STREAM_MEM_BUDGET,
                      overrides=None, mesh=None, clip_mode: str = "flat",
-                     clip_fused: bool = True) -> str:
+                     clip_fused: bool = True, calibration=None) -> str:
     """The fingerprint :func:`get_plan` would key this request on — same
     knob normalization, no probe."""
     return model_fingerprint(
         apply_fn, params, batch,
         _opts_tuple(norm_method, embed_method, conv_norm, mem_budget,
-                    overrides, mesh, clip_mode, clip_fused))
+                    overrides, mesh, clip_mode, clip_fused, calibration))
 
 
 def get_plan(apply_fn, params, batch, *, norm_method: str = "auto",
              embed_method: str = "auto", conv_norm: str = "auto",
              mem_budget: int = STREAM_MEM_BUDGET,
              overrides=None, mesh=None, clip_mode: str = "flat",
-             clip_fused: bool = True) -> ExecPlan:
+             clip_fused: bool = True, calibration=None) -> ExecPlan:
     """Cached planner entry point.  The anchor reference pinned in the
     cached plan keeps ``id(apply_fn.__self__)`` stable for the entry's
     lifetime, so a recycled id can never alias a different model.  A
@@ -1105,9 +1249,13 @@ def get_plan(apply_fn, params, batch, *, norm_method: str = "auto",
     probe entirely.  ``mesh`` participates in both the cache key and the
     fingerprint, so plans are topology-keyed; a store that holds this
     batch's plan for a *different* topology raises instead of silently
-    re-planning over a stale layout."""
+    re-planning over a stale layout.  ``calibration`` (explicit or the
+    registered one for this mesh) participates the same way: its digest
+    keys the cache and the fingerprint, so a plan priced under stale
+    measured constants fails safe exactly like one built from stale
+    code."""
     opts = _opts_tuple(norm_method, embed_method, conv_norm, mem_budget,
-                       overrides, mesh, clip_mode, clip_fused)
+                       overrides, mesh, clip_mode, clip_fused, calibration)
     ov, ms = opts[4], opts[5]
     key = plan_cache_key(apply_fn, params, batch, opts)
     plan = _PLAN_CACHE.get(key)
@@ -1125,7 +1273,10 @@ def get_plan(apply_fn, params, batch, *, norm_method: str = "auto",
             # topology blocks planning: re-key the request under the
             # candidate's mesh and compare fingerprints, so an unrelated
             # model that merely shares the batch shape never trips this.
-            cand_opts = opts[:5] + (tuple(cand.mesh),) + opts[6:]
+            cand_opts = _opts_tuple(
+                norm_method, embed_method, conv_norm, mem_budget,
+                overrides, tuple(cand.mesh), clip_mode, clip_fused,
+                calibration)
             if cand.fingerprint == model_fingerprint(apply_fn, params,
                                                      batch, cand_opts):
                 check_plan_matches(cand, mesh=ms)
@@ -1135,7 +1286,8 @@ def get_plan(apply_fn, params, batch, *, norm_method: str = "auto",
             metas, cap_shapes, tap_shapes, make_taps, params,
             norm_method=norm_method, embed_method=embed_method,
             conv_norm=conv_norm, mem_budget=mem_budget, overrides=ov,
-            mesh=ms, clip_mode=clip_mode, clip_fused=clip_fused)
+            mesh=ms, clip_mode=clip_mode, clip_fused=clip_fused,
+            calibration=calibration)
         plan = dataclasses.replace(plan, fingerprint=fp, batch_sig=sig)
     object.__setattr__(plan, "_anchor", getattr(apply_fn, "__self__",
                                                 apply_fn))
@@ -1168,3 +1320,45 @@ def auto_microbatches(plan: ExecPlan, batch_size: int,
         while B % m and m < B:
             m += 1
     return m
+
+
+# ---------------------------------------------------------------------------
+# Predicted step cost: what the mispredict loop compares measurements
+# against.  Priced in the same FLOP-equivalents the planner selects by,
+# then converted to seconds through the calibrated (or analytic) rate.
+
+
+def predicted_step_flops(plan: ExecPlan, cc: CostConstants | None = None
+                         ) -> float:
+    """Per-device FLOP-equivalents of one private step under this plan:
+    forward + backward (≈ 2 wgrad shares) + wgrad + the plan's norm and
+    contraction phases + the weighted second backward when taken + the
+    wire price of the predicted collective bytes."""
+    cc = cc or ANALYTIC_CONSTANTS
+    total_wgrad = sum(lp.wgrad_flops for lp in plan.layers.values())
+    flops = 3.0 * total_wgrad \
+        + plan.total_norm_flops + plan.total_contrib_flops
+    if plan.needs_backward:
+        flops += (BACKWARD_FIXED_FACTOR + 1.0) * total_wgrad
+    flops += cc.collective_flops_per_byte * plan.total_coll_bytes
+    return flops
+
+
+def predicted_step_seconds(plan: ExecPlan, calibration=None) -> float:
+    """Predicted wall-clock of one step: :func:`predicted_step_flops`
+    under the plan's cost constants, over the (calibrated or analytic)
+    FLOP rate."""
+    cc = resolve_cost_constants(calibration, plan.mesh)
+    return predicted_step_flops(plan, cc) / cc.flops_per_second
+
+
+def planner_verdict(mesh_plan: ExecPlan, base_plan: ExecPlan,
+                    calibration=None) -> str:
+    """Judge a sharded plan against its unsharded counterpart with
+    calibrated eyes: ``"sharded"`` when the mesh plan's predicted
+    per-device step time beats the single-device plan's, else
+    ``"unsharded"`` — the planner either fixes the plan or proves
+    unsharded is right."""
+    mesh_s = predicted_step_seconds(mesh_plan, calibration)
+    base_s = predicted_step_seconds(base_plan, calibration)
+    return "sharded" if mesh_s < base_s else "unsharded"

@@ -65,6 +65,25 @@ class KeyProvenanceError(ValueError):
     breaks the replay guarantee the accountant ledger depends on."""
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplanEvent:
+    """One firing of the engine's mispredict loop: measured step time
+    diverged from the calibrated prediction beyond the threshold, the
+    calibration was retimed from the observation, and the plan was
+    rebuilt under the new constants.  Surfaced in :meth:`explain` and
+    (when a monitor is attached) in ``StepMonitor.replans``."""
+
+    step: int                 # step the divergence was confirmed at (-1 unknown)
+    ratio: float              # measured / predicted at trigger time
+    predicted_s: float
+    measured_s: float
+    old_calibration: str      # digests
+    new_calibration: str
+    old_fingerprint: str
+    new_fingerprint: str
+    plan_changed: bool        # did any layer's realization actually flip
+
+
 def _resolve_optimizer(optimizer) -> Callable:
     if callable(optimizer):
         return optimizer
@@ -102,6 +121,26 @@ class PrivacyEngine:
                   axes, params/opt/key replicated).  A mesh *spec*
                   (``"data:8"``, axes dict/tuple) plans for that topology
                   without requiring the devices (no sharded execution).
+      calibration: measured cost constants for planning.  ``None``
+                  consults the process registry for (live hardware,
+                  mesh); a ``repro.calibrate.Calibration`` is validated
+                  strictly against the live hardware and this mesh
+                  (named errors on mismatch); a path string loads a
+                  stored blob *softly* — unusable blobs degrade to the
+                  analytic constants with a
+                  ``CalibrationFallbackWarning``; the literal
+                  ``"measure"`` runs the microbenchmark harness now
+                  (once per (hardware, mesh) per process).
+      mispredict_threshold: relative divergence of measured vs predicted
+                  step time that triggers an automatic re-plan (e.g.
+                  ``0.5`` = re-plan beyond ±50%).  Feed measured step
+                  wall-clock to :meth:`observe_step_time`; ``None``
+                  disables the loop.  Re-plans retime the calibration
+                  from the observation, rebuild the plan under the new
+                  constants, and are surfaced in :meth:`explain`,
+                  :attr:`replan_events`, and the attached ``monitor``.
+      monitor:    a ``runtime.monitor.StepMonitor`` to surface re-plan
+                  events in (``monitor.replans``).
       run_seed:   seed of the deterministic per-step noise stream: step
                   ``n``'s noise key is ``fold_in(PRNGKey(run_seed), n)``
                   (:meth:`noise_key`), a pure function of (run_seed, n)
@@ -118,7 +157,10 @@ class PrivacyEngine:
                  sampling_rate: float | None = None,
                  accountant: PrivacyAccountant | None = None,
                  plan: costmodel.ExecPlan | None = None,
-                 mesh=None, run_seed: int | None = None):
+                 mesh=None, run_seed: int | None = None,
+                 calibration=None,
+                 mispredict_threshold: float | None = 0.5,
+                 monitor=None):
         self.apply_fn = apply_fn
         self.dp = dp if dp is not None else DPConfig()
         self._params_spec = _spec_of(params)
@@ -144,14 +186,23 @@ class PrivacyEngine:
                         f"{leaf.shape[0]} is not divisible by the mesh's "
                         f"data-parallel degree {d} "
                         f"({costmodel.format_mesh(self._mesh_axes)})")
+        self._calibration = self._resolve_calibration_arg(calibration)
+        self.mispredict_threshold = mispredict_threshold
+        self._monitor = monitor
+        self.replan_events: list[ReplanEvent] = []
+        self._step_ema: float | None = None
+        self._step_obs = 0
         if plan is not None and self.dp.strategy == "auto":
             # Fail loudly *now* on a stale injected plan, naming the
-            # offending field (mesh / batch / clip mode / fingerprint).
+            # offending field (mesh / batch / clip mode / calibration /
+            # fingerprint).
             costmodel.check_plan_matches(
                 plan, mesh=self._mesh_axes,
                 batch_sig=costmodel._shape_sig(self._batch_spec),
                 fingerprint=self._fingerprint(),
-                clip_mode=self.dp.clipping.mode)
+                clip_mode=self.dp.clipping.mode,
+                calibration="" if self._calibration is None
+                else self._calibration)
         self._plan = plan
         self.run_seed = run_seed
         self._run_key = (None if run_seed is None
@@ -166,8 +217,30 @@ class PrivacyEngine:
 
     # -- planning ----------------------------------------------------------
 
+    def _resolve_calibration_arg(self, calibration):
+        """See ``calibration`` in the class docstring: registry lookup /
+        strict Calibration / ``"measure"`` / soft path load."""
+        from repro import calibrate
+        if calibration is None:
+            return calibrate.lookup(self._mesh_axes)
+        if isinstance(calibration, calibrate.Calibration):
+            calibration.validate_for(calibrate.hardware_signature(),
+                                     self._mesh_axes)
+            return calibration
+        if calibration == "measure":
+            return calibrate.get_or_measure(self._mesh_axes)
+        return calibrate.load_or_fallback(str(calibration),
+                                          mesh=self._mesh_axes)
+
+    @property
+    def calibration(self):
+        """The calibration this engine plans under (``None`` = analytic
+        fallback constants)."""
+        return self._calibration
+
     def _planner_opts(self) -> dict:
-        return dict(self.dp.planner_opts(), mesh=self._mesh_axes)
+        return dict(self.dp.planner_opts(), mesh=self._mesh_axes,
+                    calibration=self._calibration)
 
     def _fingerprint(self) -> str:
         return costmodel.plan_fingerprint(
@@ -194,8 +267,101 @@ class PrivacyEngine:
                 **self._planner_opts())
         return self._plan
 
+    # -- measured-cost feedback (the mispredict loop) ----------------------
+
+    def predicted_step_seconds(self) -> float:
+        """Calibrated prediction of one step's wall-clock under the
+        current plan — what :meth:`observe_step_time` compares against."""
+        return costmodel.predicted_step_seconds(self.plan(),
+                                                self._calibration)
+
+    def observe_step_time(self, seconds: float,
+                          step: int | None = None) -> ReplanEvent | None:
+        """Record one executed step's measured wall-clock.  An EMA of the
+        observations is compared against :meth:`predicted_step_seconds`;
+        when the relative divergence exceeds ``mispredict_threshold``
+        (after ≥ 2 observations, so one compile-tainted step can't
+        trigger), the calibration is retimed from the observation, the
+        plan is rebuilt under the new constants, and the returned
+        :class:`ReplanEvent` is appended to :attr:`replan_events` (and
+        the attached monitor).  Returns ``None`` when no re-plan fired.
+        Inert without a calibration or with ``mispredict_threshold=None``
+        — the analytic constants carry no time unit worth trusting."""
+        if (self.mispredict_threshold is None or self._calibration is None
+                or self.dp.strategy != "auto"):
+            return None
+        seconds = float(seconds)
+        self._step_obs += 1
+        self._step_ema = (seconds if self._step_ema is None
+                          else 0.5 * self._step_ema + 0.5 * seconds)
+        if self._step_obs < 2:
+            return None
+        predicted = self.predicted_step_seconds()
+        ratio = self._step_ema / max(predicted, 1e-12)
+        if abs(ratio - 1.0) <= self.mispredict_threshold:
+            return None
+        return self._replan(step, ratio, predicted, self._step_ema)
+
+    def _replan(self, step, ratio, predicted_s, measured_s) -> ReplanEvent:
+        """Retime the calibration from the observed divergence and
+        rebuild the plan (and the jitted step) under the new constants."""
+        from repro import calibrate
+        old = self._calibration
+        old_plan = self.plan()
+        new = old.retimed(predicted_s=predicted_s, measured_s=measured_s,
+                          coll_bytes=old_plan.total_coll_bytes)
+        calibrate.register(new)
+        self._calibration = new
+        self._plan = None
+        self.__dict__.pop("_jit_step", None)
+        self._step_ema = None
+        self._step_obs = 0
+        new_plan = self.plan()
+        event = ReplanEvent(
+            step=-1 if step is None else int(step), ratio=float(ratio),
+            predicted_s=float(predicted_s), measured_s=float(measured_s),
+            old_calibration=old.digest(), new_calibration=new.digest(),
+            old_fingerprint=old_plan.fingerprint,
+            new_fingerprint=new_plan.fingerprint,
+            plan_changed=old_plan.describe() != new_plan.describe())
+        self.replan_events.append(event)
+        if self._monitor is not None:
+            self._monitor.record_replan(event.step, event.ratio)
+        return event
+
+    def _explain_calibration(self) -> str:
+        if self._calibration is None:
+            lines = ["calibration: none — planning with the analytic "
+                     "fallback constants (costmodel.ANALYTIC_FALLBACK)"]
+        else:
+            c = self._calibration
+            coll = {a: f"{bw / 1e9:.1f} GB/s"
+                    for a, bw in c.collective_bytes_per_second.items()}
+            lines = [
+                f"calibration: {c.digest()} (source={c.source}, hw="
+                f"{c.hardware}) flops/s={c.flops_per_second:.3g} "
+                f"hbm={c.hbm_bytes_per_second / 1e9:.1f} GB/s"
+                + (f" collective={coll}" if coll else ""),
+                f"predicted step: {self.predicted_step_seconds() * 1e6:.0f}"
+                f" us; mispredict threshold: "
+                + (f"±{self.mispredict_threshold:g}"
+                   if self.mispredict_threshold is not None
+                   else "disabled")]
+        for ev in self.replan_events:
+            lines.append(
+                f"re-plan @ step {ev.step}: measured/predicted = "
+                f"{ev.ratio:.2f}x ({ev.measured_s * 1e6:.0f} us vs "
+                f"{ev.predicted_s * 1e6:.0f} us), calibration "
+                f"{ev.old_calibration} -> {ev.new_calibration}, plan "
+                + ("changed" if ev.plan_changed else "unchanged")
+                + f" ({ev.old_fingerprint} -> {ev.new_fingerprint})")
+        return "\n".join(lines)
+
     def explain(self) -> str:
-        """Human-readable per-layer plan table (see ExecPlan.explain)."""
+        """Human-readable per-layer plan table (see ExecPlan.explain),
+        plus the calibration block: active measured constants (or the
+        analytic fallback), the predicted step time, the mispredict
+        threshold, and every re-plan event fired so far."""
         clip = self.dp.clipping
         header = (f"PrivacyEngine: strategy={self.dp.strategy} "
                   f"C={self.dp.l2_clip} sigma={self.dp.noise_multiplier} "
@@ -206,11 +372,12 @@ class PrivacyEngine:
                   + ("" if self.dp.microbatches != "auto" else " (auto)")
                   + (f" mesh={costmodel.format_mesh(self._mesh_axes)}"
                      if self._mesh_axes else ""))
+        cal = self._explain_calibration()
         if self.dp.strategy != "auto":
             return (header + f"\nfixed strategy {self.dp.strategy!r}: the "
                     "planner is bypassed; plan below is advisory.\n"
-                    + self.plan().explain())
-        return header + "\n" + self.plan().explain()
+                    + cal + "\n" + self.plan().explain())
+        return header + "\n" + cal + "\n" + self.plan().explain()
 
     def save_plan(self, path: str):
         """Persist every plan this engine executes with — the full-batch
@@ -221,7 +388,9 @@ class PrivacyEngine:
         if exec_plan is not None \
                 and exec_plan.fingerprint != plans[0].fingerprint:
             plans.append(exec_plan)
-        costmodel.save_plan_store(path, plans)
+        costmodel.save_plan_store(
+            path, plans,
+            calibrations=[self._calibration] if self._calibration else None)
 
     def microbatches(self) -> int:
         """The resolved microbatch count (plan-driven for ``"auto"``) —

@@ -20,11 +20,37 @@ from repro.kernels import ref as _ref
 
 # Per-core VMEM the pe_conv_grad autotuner plans against: half of a TPU
 # core's ~16 MiB, leaving room for the pipeline's double-buffering.
+# The *analytic* default — vmem_budget() prefers the measured sweep
+# winner from a registered calibration, and REPRO_VMEM_BUDGET overrides
+# both.
 VMEM_BUDGET = 8 << 20
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def vmem_budget() -> int:
+    """The VMEM budget pe_conv_grad autotunes against, by precedence:
+    ``REPRO_VMEM_BUDGET`` env override > the ``pe_conv_grad`` sweep
+    winner in the registered calibration for the live hardware (see
+    ``repro.calibrate.harness.sweep_pe_conv_vmem``) > the analytic
+    :data:`VMEM_BUDGET`.  Read per call, outside the autotune cache, so
+    registering a calibration mid-process takes effect."""
+    env = os.environ.get("REPRO_VMEM_BUDGET")
+    if env:
+        return max(int(env), 1)
+    try:
+        from repro.calibrate import table as _ct
+    except ImportError:       # pragma: no cover - calibrate always ships
+        return VMEM_BUDGET
+    for calib in _ct.registered():
+        if calib.hardware != _ct.hardware_signature():
+            continue
+        budget = calib.kernels.get("pe_conv_grad", {}).get("vmem_budget")
+        if budget:
+            return int(budget)
+    return VMEM_BUDGET
 
 
 def gram_norm(x, dy, *, has_bias: bool = False, bt: int = 256):
@@ -103,7 +129,8 @@ def pe_conv_grad(x, dy, *, kernel_spatial, stride=1, dilation=1, padding=0,
             cfg = [(0, 0), (0, 0)] + [(pi, pi) for pi in p]
             x = jnp.pad(x, cfg)
         bd = pick_bd(dy.shape[1], x.shape[1], tuple(x.shape[2:]),
-                     tuple(dy.shape[2:]), tuple(kernel_spatial))
+                     tuple(dy.shape[2:]), tuple(kernel_spatial),
+                     budget=vmem_budget())
         if rank == 1:
             return _pc.pe_conv_grad_1d(x, dy, K=kernel_spatial[0], bd=bd,
                                        interpret=interp)

@@ -603,7 +603,21 @@ def main():
     ap.add_argument("--dp-set", nargs="*", default=[], metavar="K=V",
                     help="DPConfig overrides, e.g. strategy=bk "
                          "embed_norm=segsum norm_method=stream")
+    ap.add_argument("--calibration", default=None,
+                    help="measured-cost calibration JSON to pre-register "
+                         "before planning (see `python -m "
+                         "benchmarks.kernels_bench --calibrate-only`); "
+                         "unusable blobs fall back to analytic constants "
+                         "with a named warning")
     args = ap.parse_args()
+
+    if args.calibration:
+        from repro import calibrate
+        calib = calibrate.load_or_fallback(args.calibration)
+        if calib is not None:
+            calibrate.register(calib)
+            print(f"[calibrate] registered {calib.digest()} "
+                  f"(source={calib.source})")
 
     if args.plan_json:
         return plan_smoke(args.plan_json, args.plan_arch,

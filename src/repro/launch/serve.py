@@ -60,8 +60,20 @@ def main(argv=None):
     ap.add_argument("--dp-plan", default=None,
                     help="serialized ExecPlan store to pre-load (skips the "
                          "planning probe for colocated DP-gradient work)")
+    ap.add_argument("--calibration", default=None,
+                    help="measured-cost calibration JSON to pre-register "
+                         "(see `python -m benchmarks.kernels_bench "
+                         "--calibrate-only`); unusable blobs fall back to "
+                         "analytic constants with a named warning")
     args = ap.parse_args(argv)
 
+    if args.calibration:
+        from repro import calibrate
+        calib = calibrate.load_or_fallback(args.calibration)
+        if calib is not None:
+            calibrate.register(calib)
+            print(f"[calibrate] registered {calib.digest()} "
+                  f"(source={calib.source})")
     if args.dp_plan:
         from repro.core import costmodel
         n = costmodel.load_plan_store(args.dp_plan)

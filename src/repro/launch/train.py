@@ -115,6 +115,18 @@ def main(argv=None):
     ap.add_argument("--plan-json", default=None,
                     help="plan cache file: loaded if present (skips the "
                          "probe), written after planning otherwise")
+    ap.add_argument("--calibration", default=None,
+                    help="measured cost constants: a calibration JSON "
+                         "path (written by `python -m benchmarks."
+                         "kernels_bench --calibrate-only`; unusable blobs "
+                         "fall back to analytic constants with a named "
+                         "warning), or the literal 'measure' to run the "
+                         "microbenchmark harness at engine init")
+    ap.add_argument("--mispredict-threshold", type=float, default=0.5,
+                    help="relative measured-vs-predicted step time "
+                         "divergence that triggers an automatic re-plan "
+                         "(requires an active calibration and planned "
+                         "execution, i.e. strategy auto); <= 0 disables")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])
@@ -208,12 +220,23 @@ def main(argv=None):
             mesh = make_mesh_from_spec(
                 ",".join(f"{n}:{s}" for n, s in live_axes))
     params0, _ = model.init(jax.random.PRNGKey(0))
+    # One monitor for the whole run: stragglers (and re-plan events)
+    # survive restarts instead of being read off a fresh StepMonitor at
+    # the end (and they survive *process* deaths too — the monitor rides
+    # in the checkpoint).
+    mon = StepMonitor()
     engine = PrivacyEngine(
         model.apply, params0, batch_fn(0), dp=dpc, optimizer="adamw",
         lr=lambda step: cosine_schedule(step, warmup=10, total=args.steps,
                                         peak=args.lr),
         weight_decay=0.01, accountant=acct, mesh=mesh,
-        run_seed=args.run_seed)
+        run_seed=args.run_seed, calibration=args.calibration,
+        mispredict_threshold=(args.mispredict_threshold
+                              if args.mispredict_threshold > 0 else None),
+        monitor=mon)
+    if engine.calibration is not None:
+        print(f"[calibrate] {engine.calibration.digest()} "
+              f"(source={engine.calibration.source})")
     # Fixed strategies bypass the planner; don't pay an advisory probe for
     # them unless the user asks.
     if args.explain or dpc.strategy == "auto":
@@ -224,10 +247,6 @@ def main(argv=None):
         engine.save_plan(args.plan_json)
         print(f"[plan] wrote {args.plan_json}")
 
-    # One monitor for the whole run: stragglers survive restarts instead of
-    # being read off a fresh (empty) StepMonitor at the end (and they
-    # survive *process* deaths too — the monitor rides in the checkpoint).
-    mon = StepMonitor()
     mesh_axes_now = costmodel.mesh_axes(mesh)
 
     def train_state(params, opt):
@@ -274,6 +293,10 @@ def main(argv=None):
             engine.reset_clip_state()
             acct.reset()
         losses = []
+        # First step of a segment (and of each re-planned jit) compiles;
+        # its wall-clock says nothing about the steady state, so it is
+        # not fed to the mispredict loop.
+        skip_observe = True
         for step in range(start, args.steps):
             chaos.maybe_fail(step)
             mon.start()
@@ -281,6 +304,16 @@ def main(argv=None):
             params, opt, loss, aux = engine.private_step(
                 params, opt, batch, step=step)
             dt = mon.stop(step)
+            if skip_observe:
+                skip_observe = False
+            else:
+                ev = engine.observe_step_time(dt, step=step)
+                if ev is not None:
+                    skip_observe = True
+                    print(f"[replan] step {step}: measured/predicted "
+                          f"{ev.ratio:.2f}x — calibration "
+                          f"{ev.old_calibration} -> {ev.new_calibration}, "
+                          f"plan {'changed' if ev.plan_changed else 'kept'}")
             losses.append(float(loss))
             if step % 10 == 0 or step == args.steps - 1:
                 # Under stale clipping the honest "what did this step
@@ -307,7 +340,8 @@ def main(argv=None):
         backoff_s=args.restart_backoff,
         restart_window_s=args.restart_window)
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}), "
-          f"restarts={restarts}, stragglers={len(mon.stragglers)}")
+          f"restarts={restarts}, stragglers={len(mon.stragglers)}, "
+          f"replans={len(mon.replans)}")
     if args.noise:
         print(engine.report())
     return losses

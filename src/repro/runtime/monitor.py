@@ -15,6 +15,7 @@ class StepMonitor:
         self.threshold = threshold
         self.ema: float | None = None
         self.stragglers: list[tuple[int, float]] = []
+        self.replans: list[tuple[int, float]] = []
         self._t0: float | None = None
 
     def start(self):
@@ -38,6 +39,15 @@ class StepMonitor:
     def is_straggler(self, dt: float) -> bool:
         return self.ema is not None and dt > self.threshold * self.ema
 
+    def record_replan(self, step: int, ratio: float):
+        """A mispredict re-plan fired (see PrivacyEngine.observe_step_time):
+        record (step, measured/predicted ratio) and reset the EMA — the
+        new plan's step time is a new baseline, and carrying the old one
+        over would flag every post-re-plan step as a straggler (or mask
+        a regression) against a dead plan's timings."""
+        self.replans.append((int(step), float(ratio)))
+        self.ema = None
+
     # -- checkpoint (de)serialization -----------------------------------
     # The monitor rides along in DPTrainState so straggler history and the
     # EMA baseline survive restarts instead of resetting to cold-start
@@ -48,7 +58,8 @@ class StepMonitor:
         return {"alpha": self.alpha, "threshold": self.threshold,
                 "ema": self.ema,
                 "stragglers": [[int(s), float(dt)]
-                               for s, dt in self.stragglers]}
+                               for s, dt in self.stragglers],
+                "replans": [[int(s), float(r)] for s, r in self.replans]}
 
     def load_state_dict(self, state: dict):
         self.alpha = float(state["alpha"])
@@ -56,6 +67,9 @@ class StepMonitor:
         self.ema = None if state["ema"] is None else float(state["ema"])
         self.stragglers = [(int(s), float(dt))
                            for s, dt in state["stragglers"]]
+        # pre-calibration checkpoints carry no replan history
+        self.replans = [(int(s), float(r))
+                        for s, r in state.get("replans", [])]
         self._t0 = None
 
     @classmethod
