@@ -15,6 +15,11 @@ per-layer decisions the mesh flipped.  On a CPU host the device count is
 forced to N before jax initializes.
 
     PYTHONPATH=src python -m benchmarks.strategies_bench --mesh data:8
+
+A 2D spec (``--mesh data:4,model:2``) runs the same sweep tensor-sharded:
+params partitioned over the ``model`` axis via the models' param-axes
+trees, entries keyed ``{config}@data:4,model:2`` carrying the per-axis
+predicted collective bytes and the calibrated ``planner_verdict``.
 """
 from __future__ import annotations
 
@@ -63,14 +68,14 @@ def _setup(name, s):
                      rng.randint(0, cfg.vocab, (s["B"], s["seq"]))),
                  "labels": jnp.array(
                      rng.randint(0, cfg.vocab, (s["B"], s["seq"])))}
-    params, _ = model.init(jax.random.PRNGKey(0))
-    return model, params, batch
+    params, axes = model.init(jax.random.PRNGKey(0))
+    return model, params, batch, axes
 
 
 def run(out_path: str = "BENCH_strategies.json") -> dict:
     results: dict = {}
     for name, s in SETTINGS.items():
-        model, params, batch = _setup(name, s)
+        model, params, batch, _ = _setup(name, s)
         fns = {}
         for strat in s["strategies"]:
             dpc = DPConfig(l2_clip=1.0, strategy=strat)
@@ -131,7 +136,7 @@ def run_clip_modes(out_path: str = "BENCH_strategies.json") -> dict:
     if os.path.exists(out_path):
         results = json.load(open(out_path))
     for name in CLIP_CONFIGS:
-        model, params, batch = _setup(name, SETTINGS[name])
+        model, params, batch, _ = _setup(name, SETTINGS[name])
         opt0 = {"step": jnp.zeros(())}
 
         def ident_opt(grads, state, params, *, lr, weight_decay):
@@ -207,7 +212,7 @@ def run_mesh(spec: str, out_path: str = "BENCH_strategies.json",
     from repro import calibrate
     from repro.core import costmodel
     from repro.launch.mesh import make_mesh_from_spec
-    from repro.launch.sharding import batch_sharding
+    from repro.launch.sharding import batch_sharding, param_sharding
 
     mesh = make_mesh_from_spec(spec)
     axes = costmodel.mesh_axes(mesh)
@@ -224,19 +229,26 @@ def run_mesh(spec: str, out_path: str = "BENCH_strategies.json",
     for name in MESH_CONFIGS:
         s = dict(SETTINGS[name])
         s["B"] = -(-s["B"] // d) * d       # round up to a multiple of d
-        model, params, batch = _setup(name, s)
+        model, params, batch, paxes = _setup(name, s)
         eng0 = PrivacyEngine(model.apply, params, batch,
                              dp=DPConfig(l2_clip=1.0, strategy="auto"))
+        # param_axes makes a model axis real: on a 2D spec the mesh
+        # engines run tensor-sharded (psum'd partial Grams over `model`);
+        # on a pure-data mesh the axes tree is inert.
         eng1 = PrivacyEngine(model.apply, params, batch,
                              dp=DPConfig(l2_clip=1.0, strategy="auto"),
-                             mesh=mesh)
+                             mesh=mesh, param_axes=paxes)
         repl = NamedSharding(mesh, P())
         bsh = batch_sharding(batch, mesh)
+        # On a 2D spec the timed boundary matches production layout:
+        # params in (and the gradient out) partitioned over `model`.
+        psh = (param_sharding(paxes, mesh, shapes_tree=params)
+               if costmodel.mesh_model_axes(axes) else repl)
         fns = {
             "auto": jax.jit(lambda p, b, _e=eng0: _e.noisy_grad(p, b)[:2]),
             "auto_mesh": jax.jit(
                 lambda p, b, _e=eng1: _e.noisy_grad(p, b)[:2],
-                in_shardings=(repl, bsh), out_shardings=repl),
+                in_shardings=(psh, bsh), out_shardings=(repl, psh)),
         }
         times = {k: float("inf") for k in fns}
         for rep in range(3):
@@ -259,6 +271,8 @@ def run_mesh(spec: str, out_path: str = "BENCH_strategies.json",
             "mesh_vs_nomesh": times["auto_mesh"] / times["auto"],
             "plan_flips": flips,
             "predicted_coll_mb_per_dev": p1.total_coll_bytes / 2**20,
+            "predicted_coll_mb_per_dev_by_axis": {
+                a: b / 2**20 for a, b in p1.total_coll_bytes_by_axis},
         }
         emit(f"strategies/{key}/auto_mesh", times["auto_mesh"],
              f"ratio={results[key]['mesh_vs_nomesh']:.3f} "
@@ -273,17 +287,20 @@ def run_mesh(spec: str, out_path: str = "BENCH_strategies.json",
         pred_s = costmodel.predicted_step_seconds(p1, calib0)
         calib1 = calib0.retimed(predicted_s=pred_s,
                                 measured_s=times["auto_mesh"] / 1e6,
-                                coll_bytes=p1.total_coll_bytes)
+                                coll_bytes=p1.total_coll_bytes,
+                                coll_bytes_by_axis=p1
+                                .total_coll_bytes_by_axis)
         calibrate.register(calib1)
         eng2 = PrivacyEngine(model.apply, params, batch,
                              dp=DPConfig(l2_clip=1.0, strategy="auto"),
-                             mesh=mesh, calibration=calib1)
+                             mesh=mesh, param_axes=paxes,
+                             calibration=calib1)
         p2 = eng2.plan()
         verdict = costmodel.planner_verdict(p2, p0, calib1)
         plan_changed = p2.describe() != p1.describe()
         if plan_changed:
             f2 = jax.jit(lambda p, b, _e=eng2: _e.noisy_grad(p, b)[:2],
-                         in_shardings=(repl, bsh), out_shardings=repl)
+                         in_shardings=(psh, bsh), out_shardings=(repl, psh))
             t2 = time_fn(f2, params, batch, warmup=2, iters=3,
                          reduce="min")
         else:
@@ -292,6 +309,10 @@ def run_mesh(spec: str, out_path: str = "BENCH_strategies.json",
         results[key].update({
             "calibration": calib1.digest(),
             "planner_verdict": verdict,
+            # per-axis view behind the verdict: what the calibrated plan
+            # says each mesh axis carries, priced at that axis's wire
+            "calibrated_coll_mb_per_dev_by_axis": {
+                a: b / 2**20 for a, b in p2.total_coll_bytes_by_axis},
             "calibrated_plan_changed": plan_changed,
             "times_us_calibrated": t2,
             "mesh_vs_nomesh_calibrated": ratio_cal,

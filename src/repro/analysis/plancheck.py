@@ -168,10 +168,14 @@ def check_plan(graph: FlatGraph, *, plan, clip_mode: str,
 
     # -- predicted collective traffic -------------------------------------
     if coll_bytes_warn and plan.total_coll_bytes > coll_bytes_warn:
+        by_axis = getattr(plan, "total_coll_bytes_by_axis", ())
+        per_axis = ("" if not by_axis else " ["
+                    + ", ".join(f"{a}: {b / 2**20:.1f} MB"
+                                for a, b in by_axis) + "]")
         findings.append(Finding(
             "warning", "coll_bytes_high",
             f"plan predicts {plan.total_coll_bytes / 2**20:.1f} MB/device "
-            f"of collective traffic per step (threshold "
+            f"of collective traffic per step{per_axis} (threshold "
             f"{coll_bytes_warn / 2**20:.0f} MB) — a stash/backward layout "
             f"is putting per-example state on the wire; compare "
             f"realizations with engine.explain()", where))

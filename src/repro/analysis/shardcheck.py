@@ -6,11 +6,16 @@ statically checkable is the combination that forces SPMD to insert
 them correctly:
 
   * the declared in/out shardings: batch split over the data axes on
-    the leading (example) dim, and params, optimizer state, PRNG key,
-    clip state, and **every output** replicated.  Replicated outputs
-    are the load-bearing half: the clipped sum and the noised update
-    must be bitwise-identical on every device, which XLA can only
-    realize by all-reducing the per-shard partial sums;
+    the leading (example) dim; the PRNG key strictly replicated; and
+    params, optimizer state, clip state, and **every output**
+    replicated *across the data axes* — partitioning over model axes
+    is the tensor-parallel layout and is allowed, but any data-axis
+    name in a param/opt/output spec is an error.  Data-replicated
+    outputs are the load-bearing half: each shard of the clipped sum
+    and the noised update must be bitwise-identical on every data
+    replica, which XLA can only realize by all-reducing the per-shard
+    partial sums (per-example Gram/norm contributions psum over
+    ``model``, scalar norms over the data axes);
   * taint facts from the global graph: the clip decision (the
     ``clip_coef`` marker) is computed from all ``B`` global examples'
     norms — under a sharded batch that norm vector only exists after a
@@ -41,6 +46,21 @@ def _is_replicated(sh) -> bool:
     if spec is None:
         return True
     return all(p is None for p in tuple(spec))
+
+
+def _data_replicated(sh) -> bool:
+    """True iff no data axis appears in the spec — replicated across the
+    data axes; model-axis partitioning (tensor parallelism) is fine."""
+    spec = getattr(sh, "spec", sh)
+    if spec is None:
+        return True
+    for p in tuple(spec):
+        if p is None:
+            continue
+        axes = p if isinstance(p, (tuple, list)) else (p,)
+        if any(ax in DATA_AXIS_NAMES for ax in axes):
+            return False
+    return True
 
 
 def _leading_data_sharded(sh) -> bool:
@@ -80,27 +100,35 @@ def check_sharding(graph: FlatGraph, *, taints, batch_size: int,
                         "a batch leaf is not sharded over the data axes "
                         "on its leading (example) dim — per-example work "
                         "would not be data-parallel", where))
-            else:
+            elif name == "key":
                 bad = [s for s in leaves if not _is_replicated(s)]
                 if bad:
-                    code = ("key_sharded" if name == "key"
-                            else f"{name}_not_replicated")
                     findings.append(Finding(
-                        "error", code,
-                        f"{name} input is not replicated under the mesh"
-                        + (" — per-shard key slices mean per-shard noise "
-                           "draws" if name == "key" else ""), where))
+                        "error", "key_sharded",
+                        "key input is not replicated under the mesh — "
+                        "per-shard key slices mean per-shard noise draws",
+                        where))
+            else:
+                bad = [s for s in leaves if not _data_replicated(s)]
+                if bad:
+                    findings.append(Finding(
+                        "error", f"{name}_not_replicated",
+                        f"a {name} input is sharded over a data axis — "
+                        f"params/opt/clip state must be replicated across "
+                        f"the data shards (model-axis partitioning is the "
+                        f"tensor-parallel layout and is allowed)", where))
     if out_shardings is not None:
         import jax
         bad = [s for s in jax.tree.leaves(out_shardings)
-               if not _is_replicated(s)]
+               if not _data_replicated(s)]
         if bad:
             findings.append(Finding(
                 "error", "outputs_not_replicated",
-                "step outputs are not replicated — the clipped+noised "
-                "update must be identical on every device (the all-reduce "
-                "XLA inserts to realize replication is what sums the "
-                "per-shard contributions)", where))
+                "a step output is sharded over a data axis — every shard "
+                "of the clipped+noised update must be identical on every "
+                "data replica (the all-reduce XLA inserts to realize that "
+                "replication is what sums the per-shard contributions); "
+                "model-axis partitioning is allowed", where))
 
     # -- taint facts on the global graph ----------------------------------
     for node, _ in graph.markers():

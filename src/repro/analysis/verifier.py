@@ -204,8 +204,17 @@ def verify_engine(engine, *, opt=None,
         data_size=costmodel.mesh_data_size(mesh_axes),
         in_shardings=shardings[0] if shardings else None,
         out_shardings=shardings[1] if shardings else None))
+    model_axes = costmodel.mesh_model_axes(mesh_axes)
+    params_partitioned = bool(shardings) and any(
+        not shardcheck._is_replicated(s)
+        for s in jax.tree.leaves(shardings[0][0]))
+    layout = ("params/opt partitioned over "
+              + "x".join(a for a, _ in model_axes)
+              + ", key replicated, outputs data-replicated"
+              if model_axes and params_partitioned
+              else "params/opt/key/outputs replicated")
     checked["sharding"] = (
-        f"batch data-sharded, params/opt/key/outputs replicated on "
+        f"batch data-sharded, {layout} on "
         f"{costmodel.format_mesh(mesh_axes)}; clip decisions global, "
         f"noise drawn once" if mesh_axes
         else "no mesh: single-device step")

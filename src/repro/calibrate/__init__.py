@@ -18,7 +18,8 @@ from __future__ import annotations
 import warnings
 
 from repro.calibrate.table import (  # noqa: F401  (public re-exports)
-    CALIBRATION_FORMAT_VERSION, Calibration, CalibrationError,
+    CALIBRATION_FORMAT_VERSION, Calibration,
+    CalibrationAxisFallbackWarning, CalibrationError,
     CalibrationFallbackWarning, CalibrationFormatError,
     CalibrationHardwareMismatch, CalibrationMeshMismatch,
     CalibrationValueError, clear_registry, hardware_signature, injected,

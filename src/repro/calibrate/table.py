@@ -28,6 +28,7 @@ import hashlib
 import json
 import math
 import time
+import warnings
 from typing import Any, Mapping
 
 import jax
@@ -65,6 +66,13 @@ class CalibrationMeshMismatch(CalibrationError):
 class CalibrationFallbackWarning(UserWarning):
     """Emitted (never raised) when a soft consumer falls back to the
     analytic constants because a calibration was absent or rejected."""
+
+
+class CalibrationAxisFallbackWarning(UserWarning):
+    """Emitted when multi-axis collective traffic is priced through the
+    legacy axis-less (slowest-axis) lookup.  On a 2D mesh the slowest
+    axis misprices every byte that crosses a faster axis — call sites
+    that know which axis a collective crosses must name it."""
 
 
 def hardware_signature() -> str:
@@ -128,9 +136,12 @@ class Calibration:
     # -- cost-model lookups ------------------------------------------------
 
     def collective_flops_per_byte(self, axis: str | None = None) -> float:
-        """FLOP-equivalents of one collective byte on the wire.  With no
-        axis named, the *slowest* measured axis prices the traffic (the
-        conservative choice for plans that mix axes)."""
+        """FLOP-equivalents of one collective byte on the wire, for the
+        mesh axis the collective actually crosses.  The axis-less form is
+        legacy: exact for single-axis calibrations, but on a multi-axis
+        calibration it prices *all* traffic at the slowest measured axis
+        and emits :class:`CalibrationAxisFallbackWarning` — cost-model
+        call sites name the axis instead."""
         table = self.collective_bytes_per_second
         if not table:
             raise CalibrationValueError(
@@ -142,6 +153,13 @@ class Calibration:
                     f"calibration {self.digest()} has no measurement for "
                     f"mesh axis {axis!r}; measured axes: {sorted(table)}")
             return self.flops_per_second / table[axis]
+        if len(table) > 1:
+            warnings.warn(
+                f"calibration {self.digest()} measured "
+                f"{len(table)} mesh axes {sorted(table)} but was asked "
+                f"for an axis-less wire price; pricing all traffic at "
+                f"the slowest axis — name the axis the collective "
+                f"crosses", CalibrationAxisFallbackWarning, stacklevel=2)
         return self.flops_per_second / min(table.values())
 
     def hbm_flops_per_byte(self) -> float:
@@ -244,29 +262,40 @@ class Calibration:
     # -- derivation --------------------------------------------------------
 
     def retimed(self, *, predicted_s: float, measured_s: float,
-                coll_bytes: float) -> "Calibration":
+                coll_bytes: float,
+                coll_bytes_by_axis=None) -> "Calibration":
         """A calibration updated so the cost model would have predicted
         ``measured_s`` for the step it predicted ``predicted_s`` for —
         the engine's mispredict feedback.  When the step moved collective
         bytes, the gap is attributed to the wire (the term the analytic
         model most mis-prices); otherwise the FLOP rate absorbs it.
-        Deterministic: a pure function of (self, predicted, measured)."""
+        ``coll_bytes_by_axis`` (``(("data", bytes), ...)`` from the
+        plan's per-axis breakdown) prices the old wire share on the axes
+        the traffic actually crossed; without it the legacy axis-less
+        lookup prices the scalar total (and warns on multi-axis
+        calibrations).  Deterministic: a pure function of its inputs."""
         predicted_s = _finite_pos(predicted_s, "predicted_s")
         measured_s = _finite_pos(measured_s, "measured_s")
-        if coll_bytes > 0.0 and self.collective_bytes_per_second:
+        table = self.collective_bytes_per_second
+        by_axis = dict(coll_bytes_by_axis or ())
+        if table and (by_axis or coll_bytes > 0.0):
             # Solve for the wire bandwidth that closes the gap, holding
             # the compute terms fixed.  The compute share of the
             # prediction is predicted_s minus the old wire share.
-            old_fpb = self.collective_flops_per_byte()
-            wire_s_old = self.seconds_for_flops(old_fpb * coll_bytes)
-            compute_s = max(predicted_s - wire_s_old, 1e-12)
-            wire_s_new = max(measured_s - compute_s, 1e-12)
-            scale = wire_s_old / wire_s_new if wire_s_new > 0 else 1.0
-            table = {axis: bw * scale for axis, bw
-                     in self.collective_bytes_per_second.items()}
-            return dataclasses.replace(
-                self, collective_bytes_per_second=table, source="replan",
-                measured_at=self.measured_at)
+            if by_axis:
+                wire_s_old = sum(float(b) / table[a]
+                                 for a, b in by_axis.items() if a in table)
+            else:
+                old_fpb = self.collective_flops_per_byte()
+                wire_s_old = self.seconds_for_flops(old_fpb * coll_bytes)
+            if wire_s_old > 0.0:
+                compute_s = max(predicted_s - wire_s_old, 1e-12)
+                wire_s_new = max(measured_s - compute_s, 1e-12)
+                scale = wire_s_old / wire_s_new
+                new_table = {axis: bw * scale for axis, bw in table.items()}
+                return dataclasses.replace(
+                    self, collective_bytes_per_second=new_table,
+                    source="replan", measured_at=self.measured_at)
         scale = predicted_s / measured_s
         return dataclasses.replace(
             self, flops_per_second=self.flops_per_second * scale,

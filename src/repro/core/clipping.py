@@ -13,7 +13,11 @@ example and the clip coefficients see the psum'd global norm; the clipped
 gradient sum is all-reduced over the data axis like any gradient.  Noise
 is generated from the one replicated key against the replicated gradient,
 so every device adds the *same* draw — not independent per-shard noise
-(which would inflate the variance by the shard count).
+(which would inflate the variance by the shard count).  With params
+partitioned over a model axis the *noise array itself* is sharded, which
+is why this module pins the partitionable threefry implementation below:
+every draw must be a pure function of (key, position), identical under
+any layout.
 """
 from __future__ import annotations
 
@@ -27,6 +31,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import costmodel, strategies
+
+# Legacy (non-partitionable) threefry generates different bits when XLA
+# partitions a draw: a model-sharded noise array would silently differ
+# from the single-device draw for the same key, breaking both the
+# sharded == single-device equivalence and noise-replay across topology
+# changes (elastic resume).  The partitionable implementation makes
+# every draw a pure function of (key, position) — identical values under
+# any sharding — so it is a correctness requirement here, not a tuning
+# flag.
+jax.config.update("jax_threefry_partitionable", True)
 
 CLIP_MODES = ("flat", "per_layer", "stale")
 

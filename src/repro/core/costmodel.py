@@ -134,13 +134,30 @@ class CostConstants:
     """The rates one planning pass prices against, plus provenance.
     ``calibration`` is the Calibration digest ("" when analytic) — it is
     folded into plan fingerprints so plans built under different measured
-    constants fail safe exactly like plans built from different code."""
+    constants fail safe exactly like plans built from different code.
+
+    ``collective_flops_per_byte_by_axis`` holds the per-mesh-axis wire
+    prices (a hashable ``(("data", p), ("model", p))`` tuple) when the
+    calibration measured them; :meth:`coll_price` is the per-axis lookup
+    every collective cost term goes through, with the scalar
+    ``collective_flops_per_byte`` as the fallback for axes that were
+    never measured (and for legacy un-axed pricing)."""
 
     collective_flops_per_byte: float
     hbm_flops_per_byte: float
     flops_per_second: float
     source: str = "analytic"
     calibration: str = ""
+    collective_flops_per_byte_by_axis: tuple = ()
+
+    def coll_price(self, axis: str) -> float:
+        """Wire price (FLOP-equivalents per byte) for traffic crossing
+        ``axis`` — the measured per-axis rate when available, else the
+        scalar constant."""
+        for name, price in self.collective_flops_per_byte_by_axis:
+            if name == axis:
+                return price
+        return self.collective_flops_per_byte
 
 
 ANALYTIC_CONSTANTS = CostConstants(
@@ -172,14 +189,23 @@ def resolve_cost_constants(calibration=None, mesh=None) -> CostConstants:
     if calib is None:
         return ANALYTIC_CONSTANTS
     if calib.collective_bytes_per_second:
-        coll = calib.collective_flops_per_byte()
+        # Price every measured axis explicitly — the scalar is the
+        # slowest axis (max price), kept only as the fallback for axes
+        # without a measurement.  Never the axis-less accessor here: that
+        # path is the legacy slowest-axis mispricing and warns.
+        by_axis = tuple(
+            (axis, calib.collective_flops_per_byte(axis))
+            for axis in sorted(calib.collective_bytes_per_second))
+        coll = max(price for _, price in by_axis)
     else:
+        by_axis = ()
         coll = ANALYTIC_FALLBACK["collective_flops_per_byte"]
     return CostConstants(
         collective_flops_per_byte=coll,
         hbm_flops_per_byte=calib.hbm_flops_per_byte(),
         flops_per_second=calib.flops_per_second,
-        source=calib.source, calibration=calib.digest())
+        source=calib.source, calibration=calib.digest(),
+        collective_flops_per_byte_by_axis=by_axis)
 
 # contrib for a local_vjp layer replays the layer's VJP once *per
 # example* under vmap — for scan-based layers (SSM recurrences) the
@@ -198,8 +224,18 @@ PLAN_CACHE_SIZE = 16
 # is hashable (cache keys), JSON-able (plan payloads), and fingerprintable.
 
 
+def _drop_unit_axes(axes: tuple) -> tuple:
+    """Size-1 axes are topology no-ops: ``(("data", 8), ("model", 1))``
+    executes identically to ``(("data", 8),)``, so they are normalized
+    out — otherwise stored plans keyed on one spelling fail safe
+    spuriously against the other (`check_plan_matches` compares the
+    normalized tuples)."""
+    return tuple((n, s) for n, s in axes if int(s) != 1)
+
+
 def mesh_axes(mesh) -> tuple:
-    """Normalize a mesh description to ``(("data", 8), ("model", 2))``."""
+    """Normalize a mesh description to ``(("data", 8), ("model", 2))``.
+    Size-1 axes are dropped (see :func:`_drop_unit_axes`)."""
     if mesh is None:
         return ()
     if isinstance(mesh, str):
@@ -214,13 +250,15 @@ def mesh_axes(mesh) -> tuple:
                     f"bad mesh spec {mesh!r}; expected 'data:8' or "
                     f"'data:4,model:2'")
             out.append((name.strip(), int(size)))
-        return tuple(out)
+        return _drop_unit_axes(tuple(out))
     if isinstance(mesh, Mapping):
-        return tuple((str(k), int(v)) for k, v in mesh.items())
+        return _drop_unit_axes(
+            tuple((str(k), int(v)) for k, v in mesh.items()))
     shape = getattr(mesh, "shape", None)
     if isinstance(shape, Mapping):        # jax.sharding.Mesh
-        return tuple((str(k), int(v)) for k, v in shape.items())
-    return tuple((str(k), int(v)) for k, v in mesh)
+        return _drop_unit_axes(
+            tuple((str(k), int(v)) for k, v in shape.items()))
+    return _drop_unit_axes(tuple((str(k), int(v)) for k, v in mesh))
 
 
 def mesh_data_size(axes: tuple) -> int:
@@ -229,6 +267,23 @@ def mesh_data_size(axes: tuple) -> int:
         if name in DATA_AXIS_NAMES:
             d *= int(size)
     return d
+
+
+def mesh_data_axes(axes: tuple) -> tuple:
+    """The data-parallel (batch-sharded) axes of a normalized mesh."""
+    return tuple((n, s) for n, s in axes if n in DATA_AXIS_NAMES)
+
+
+def mesh_model_axes(axes: tuple) -> tuple:
+    """The model-parallel (tensor-sharded) axes of a normalized mesh."""
+    return tuple((n, s) for n, s in axes if n not in DATA_AXIS_NAMES)
+
+
+def mesh_model_size(axes: tuple) -> int:
+    m = 1
+    for _, size in mesh_model_axes(axes):
+        m *= int(size)
+    return m
 
 
 def format_mesh(axes: tuple) -> str:
@@ -327,10 +382,12 @@ class LayerPlan:
     wgrad_flops: float        # this layer's share of a weighted backward
     stash_bytes: float = 0.0  # size of the (B, *param) grads if stashed
     fallback_norm: str = ""   # best no-stash method (cumulative demotion)
-    param_bytes: float = 0.0  # parameter bytes (grad-sync unit)
+    param_bytes: float = 0.0  # parameter bytes (grad-sync unit, per shard)
     coll_bytes: float = 0.0   # predicted collective bytes per step
     ex_per_dev: float = 0.0   # examples on one device's batch shard
     fused: bool = False       # stale mode: single-pass gram_norm_fused
+    model_shards: int = 1     # tensor-parallel degree this layer splits over
+    coll_bytes_by_axis: tuple = ()  # (("data", bytes), ...) per mesh axis
 
 
 @dataclasses.dataclass(frozen=True)
@@ -343,7 +400,7 @@ class GroupPlan:
     sum_method: str                # stash | contrib | backward
 
 
-PLAN_FORMAT_VERSION = 5   # v5: calibration digest in fingerprints/payloads
+PLAN_FORMAT_VERSION = 6   # v6: per-mesh-axis collective bytes in payloads
 
 _META_FIELDS = ("kind", "path", "param_key", "bias_key", "w_transposed",
                 "segmented", "scanned", "shared", "static")
@@ -398,6 +455,7 @@ class ExecPlan:
     mesh: tuple = ()               # (("data", 8), ...) this plan targets
     batch_sig: tuple = ()          # batch shape signature the plan was built on
     total_coll_bytes: float = 0.0  # per-device collective bytes per step
+    total_coll_bytes_by_axis: tuple = ()  # (("data", bytes), ...) breakdown
     clip_mode: str = "flat"        # flat | per_layer | stale (coefficient flow)
     calibration: str = ""          # Calibration digest priced under ("" analytic)
     _anchor: Any = None            # pins apply_fn identity while cached
@@ -453,9 +511,14 @@ class ExecPlan:
             f"clipping mode: {self.clip_mode}"
             + (f" ({n_fused} fused single-pass norm+contrib layer"
                f"{'s' if n_fused != 1 else ''})" if n_fused else ""))
+        per_axis = ("; per axis: " + ", ".join(
+            f"{a}={b / 2**20:.2f} MB"
+            for a, b in self.total_coll_bytes_by_axis)
+            if self.total_coll_bytes_by_axis else "")
         lines.append(
             f"mesh: {format_mesh(self.mesh)}; predicted collectives "
-            f"{self.total_coll_bytes / 2**20:.2f} MB/step/device")
+            f"{self.total_coll_bytes / 2**20:.2f} MB/step/device"
+            + per_axis)
         lines.append(
             f"cost constants: measured calibration {self.calibration}"
             if self.calibration else
@@ -479,9 +542,11 @@ class ExecPlan:
             "total_norm_flops": self.total_norm_flops,
             "total_contrib_flops": self.total_contrib_flops,
             "total_coll_bytes": self.total_coll_bytes,
+            "total_coll_bytes_by_axis":
+                _jsonable(self.total_coll_bytes_by_axis),
             "calibration": self.calibration,
             "capture_bytes": self.capture_bytes,
-            "layers": {n: dataclasses.asdict(lp)
+            "layers": {n: _jsonable(dataclasses.asdict(lp))
                        for n, lp in self.layers.items()},
             "groups": [{"path": list(g.path), "members": list(g.members),
                         "norm_mode": g.norm_mode,
@@ -500,7 +565,10 @@ class ExecPlan:
             raise ValueError(
                 f"unsupported plan format {p.get('format')!r} "
                 f"(this build reads {PLAN_FORMAT_VERSION})")
-        layers = {n: LayerPlan(**d) for n, d in p["layers"].items()}
+        layers = {
+            n: LayerPlan(**{**d, "coll_bytes_by_axis":
+                            _retuple(d.get("coll_bytes_by_axis", []))})
+            for n, d in p["layers"].items()}
         groups = tuple(
             GroupPlan(tuple(g["path"]), tuple(g["members"]),
                       g["norm_mode"], g["sum_method"]) for g in p["groups"])
@@ -526,6 +594,8 @@ class ExecPlan:
                    mesh=_retuple(p.get("mesh", [])),
                    batch_sig=_retuple(p.get("batch_sig", [])),
                    total_coll_bytes=p.get("total_coll_bytes", 0.0),
+                   total_coll_bytes_by_axis=_retuple(
+                       p.get("total_coll_bytes_by_axis", [])),
                    clip_mode=p.get("clip_mode", "flat"),
                    calibration=p.get("calibration", ""))
 
@@ -580,18 +650,35 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
     app_dy = dy_shape[k:]
     d = mesh_data_size(mesh)
     ring = _ring(d)
+    daxes = mesh_data_axes(mesh)
+    maxes = mesh_model_axes(mesh)
+    msize = mesh_model_size(mesh)
 
     def _shard(B: int) -> int:
         return max(1, -(-int(B) // d))
 
-    def _scal_cost(B: int) -> float:
+    def _data_wire(nbytes: float) -> float:
+        # Bytes crossing the data-parallel ring(s), priced on the axis
+        # they actually cross: a hierarchical all-reduce moves ring(s)
+        # bytes per axis of size s, each at that axis's measured price.
+        return sum(cc.coll_price(a) * nbytes * _ring(s) for a, s in daxes)
+
+    def _model_wire(nbytes: float) -> float:
+        # Bytes psum'd over the model (tensor-parallel) axes — the
+        # partial-Gram / partial-norm reduction of tensor-sharded layers.
+        return sum(cc.coll_price(a) * nbytes * _ring(s) for a, s in maxes)
+
+    def _scal_cost(B: int, model_sharded: bool = False) -> float:
         # all-reduce of the per-example scalar norms: (B,) float32.
-        # Per-layer clipping drops it: a layer's coefficient depends only
-        # on its own norm, which lives on the shard holding the example —
-        # there is no cross-layer total to reduce before the sum phase.
-        if clip_mode == "per_layer":
-            return 0.0
-        return cc.collective_flops_per_byte * B * BYTES * ring
+        # Per-layer clipping drops the *data*-axis reduction: a layer's
+        # coefficient depends only on its own norm, which lives on the
+        # shard holding the example.  A tensor-sharded layer still pays
+        # the model-axis psum — its per-example norm is assembled from
+        # partial Grams that live on every model shard.
+        w = 0.0 if clip_mode == "per_layer" else _data_wire(B * BYTES)
+        if model_sharded:
+            w += _model_wire(B * BYTES)
+        return w
 
     def _fused_credit(read_bytes: float, cand_flops: float) -> float:
         # Stale coefficients are known entering the pass, so the Gram
@@ -608,8 +695,10 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
         return 0.0
 
     def _move_cost(stash_bytes: float) -> float:
-        # per-device per-example grads crossing the grad-sync ring
-        return cc.collective_flops_per_byte * stash_bytes * ring
+        # per-device per-example grads crossing the grad-sync ring; a
+        # tensor-sharded layer's stash is its local param slice, so the
+        # caller passes the already-divided per-shard bytes
+        return _data_wire(stash_bytes)
 
     if meta.kind == "dense" and meta.segmented:
         x_shape = tuple(cap_sh["x"].shape)[k:]
@@ -617,13 +706,18 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
         G = _prod(x_shape[:-2]) * stack
         B = meta.static["n_examples"]
         Bl = _shard(B)
+        # Expert-sharded MoE layers place G/msh experts per model shard.
+        msh = msize if msize > 1 and G % msize == 0 else 1
+        Gl = G // msh
         m = (norm_method if norm_method not in ("auto", "pallas")
-             else seg_norm_method(S, Di, Do, Bl, G, mem_budget))
-        nf = (G * S * S * (Di + Do + Bl) if m == "gram" else G * Bl * Di * Do)
-        cf = 2.0 * G * S * Di * Do
+             else seg_norm_method(S, Di, Do, Bl, Gl, mem_budget))
+        nf = (Gl * S * S * (Di + Do + Bl) if m == "gram"
+              else Gl * Bl * Di * Do)
+        cf = 2.0 * Gl * S * Di * Do
         return LayerPlan(name, "seg_dense", m, False, nf, cf, cf,
-                         stash_bytes=Bl * G * Di * Do * BYTES,
-                         param_bytes=G * Di * Do * BYTES, ex_per_dev=Bl)
+                         stash_bytes=Bl * Gl * Di * Do * BYTES,
+                         param_bytes=Gl * Di * Do * BYTES, ex_per_dev=Bl,
+                         model_shards=msh)
 
     if meta.kind == "dense":
         x_shape = tuple(cap_sh["x"].shape)[k:]
@@ -633,14 +727,21 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
         mult = stack
         if meta.shared and k:
             T, mult = T * stack, 1        # folded into the sequence axis
-        cf = 2.0 * Bl * T * Di * Do * mult
-        pbytes = Di * Do * BYTES * mult
-        # Stashing keeps (B, *stack, Di, Do) alive until the sum phase;
-        # the un-stashed stream norm reduces one stacked layer at a time
-        # (kinds.apply_kind's sequential loop), so it only needs one
-        # layer's scratch but pays the contraction again in phase 2.
-        mem_stash = Bl * Di * Do * BYTES * mult
-        mem_layer = Bl * Di * Do * BYTES
+        # Tensor sharding over the model axes partitions the output
+        # width: each device contracts its local Do/msh slice (the input
+        # activations stay replicated), the per-example norm is the
+        # model-axis psum of the partial Grams, and the stash/param
+        # footprint is the local slice.
+        msh = msize if msize > 1 and Do % msize == 0 else 1
+        Dol = Do // msh
+        cf = 2.0 * Bl * T * Di * Dol * mult
+        pbytes = Di * Dol * BYTES * mult
+        # Stashing keeps (B, *stack, Di, Do/msh) alive until the sum
+        # phase; the un-stashed stream norm reduces one stacked layer at
+        # a time (kinds.apply_kind's sequential loop), so it only needs
+        # one layer's scratch but pays the contraction again in phase 2.
+        mem_stash = Bl * Di * Dol * BYTES * mult
+        mem_layer = Bl * Di * Dol * BYTES
         stash = False
         fallback = norm_method
         if norm_method == "auto":
@@ -648,16 +749,17 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
                 m = fallback = "rank1"
             else:
                 per_ex = Bl * mult
-                gram_flops = (2.0 * T * T * (Di + Do)
-                              + 2.0 * T * Di * Do) * per_ex
-                gram_total = (gram_flops + _scal_cost(B)
+                gram_flops = (2.0 * T * T * (Di + Dol)
+                              + 2.0 * T * Di * Dol) * per_ex
+                gram_total = (gram_flops + _scal_cost(B, msh > 1)
                               - _fused_credit(
-                                  T * (Di + Do) * BYTES * per_ex,
+                                  T * (Di + Dol) * BYTES * per_ex,
                                   gram_flops))
-                stream_stash = (4.0 * T * Di * Do * per_ex
+                stream_stash = (4.0 * T * Di * Dol * per_ex
                                 + _move_cost(mem_stash))
-                stream_again = (4.0 * T * Di * Do
-                                + 2.0 * T * Di * Do) * per_ex + _scal_cost(B)
+                stream_again = (4.0 * T * Di * Dol
+                                + 2.0 * T * Di * Dol) * per_ex \
+                    + _scal_cost(B, msh > 1)
                 fallback = ("stream" if stream_again < gram_total
                             and mem_layer <= mem_budget else "gram")
                 if stream_stash < gram_total and mem_stash <= mem_budget:
@@ -669,13 +771,14 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
             stash = m == "stream" and mem_stash <= mem_budget
         if m == "rank1" and T != 1:
             m = fallback = "gram"
-        nf = {"gram": 2.0 * T * T * (Di + Do),
-              "pallas": 2.0 * T * T * (Di + Do),
-              "stream": 4.0 * T * Di * Do,
-              "rank1": 2.0 * T * (Di + Do)}[m] * Bl * mult
+        nf = {"gram": 2.0 * T * T * (Di + Dol),
+              "pallas": 2.0 * T * T * (Di + Dol),
+              "stream": 4.0 * T * Di * Dol,
+              "rank1": 2.0 * T * (Di + Dol)}[m] * Bl * mult
         return LayerPlan(name, "dense", m, stash, nf, cf, cf,
                          stash_bytes=mem_stash, fallback_norm=fallback,
-                         param_bytes=pbytes, ex_per_dev=Bl)
+                         param_bytes=pbytes, ex_per_dev=Bl,
+                         model_shards=msh)
 
     if meta.kind == "conv":
         st = meta.static
@@ -687,24 +790,30 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
         K = _prod(st["kernel_shape"][2:])
         g = max(st.get("groups", 1), 1)
         F, Dg = (C // g) * K, D // g
-        cf = 2.0 * Bl * T * F * Dg * g * stack
-        pbytes = D * (C // g) * K * BYTES * stack
-        mem_stash = Bl * D * (C // g) * K * BYTES * stack
-        mem_layer = Bl * D * (C // g) * K * BYTES
+        # Tensor sharding partitions the output channels: each model
+        # shard owns Dg/msh filters per group, contracts its local patch
+        # slice for the ghost norm, and psums the partial per-example
+        # norms over the model axes.
+        msh = msize if msize > 1 and Dg % msize == 0 else 1
+        Dgl = Dg // msh
+        cf = 2.0 * Bl * T * F * Dgl * g * stack
+        pbytes = (D // msh) * (C // g) * K * BYTES * stack
+        mem_stash = Bl * (D // msh) * (C // g) * K * BYTES * stack
+        mem_layer = Bl * (D // msh) * (C // g) * K * BYTES
         stash = False
         fallback = conv_norm
         if conv_norm == "auto":
             per_ex = Bl * stack
-            ghost_flops = (2.0 * T * T * (F + Dg)
-                           + 2.0 * T * F * Dg) * g * per_ex
-            ghost_total = (ghost_flops + _scal_cost(B)
+            ghost_flops = (2.0 * T * T * (F + Dgl)
+                           + 2.0 * T * F * Dgl) * g * per_ex
+            ghost_total = (ghost_flops + _scal_cost(B, msh > 1)
                            - _fused_credit(
-                               T * (F + Dg) * g * BYTES * per_ex,
+                               T * (F + Dgl) * g * BYTES * per_ex,
                                ghost_flops))
-            pe_stash = (4.0 * T * F * Dg * g * per_ex
+            pe_stash = (4.0 * T * F * Dgl * g * per_ex
                         + _move_cost(mem_stash))
-            pe_again = ((4.0 * T * F * Dg + 2.0 * T * F * Dg) * g * per_ex
-                        + _scal_cost(B))
+            pe_again = ((4.0 * T * F * Dgl + 2.0 * T * F * Dgl) * g * per_ex
+                        + _scal_cost(B, msh > 1))
             fallback = ("pe" if pe_again < ghost_total
                         and mem_layer <= mem_budget else "ghost")
             if pe_stash < ghost_total and mem_stash <= mem_budget:
@@ -714,11 +823,12 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
         else:
             m = conv_norm
             stash = m == "pe" and mem_stash <= mem_budget
-        nf = (2.0 * Bl * T * T * (F + Dg) * g if m == "ghost"
-              else 4.0 * Bl * T * F * Dg * g) * stack
+        nf = (2.0 * Bl * T * T * (F + Dgl) * g if m == "ghost"
+              else 4.0 * Bl * T * F * Dgl * g) * stack
         return LayerPlan(name, "conv", m, stash, nf, cf, cf,
                          stash_bytes=mem_stash, fallback_norm=fallback,
-                         param_bytes=pbytes, ex_per_dev=Bl)
+                         param_bytes=pbytes, ex_per_dev=Bl,
+                         model_shards=msh)
 
     if meta.kind == "embed":
         ids_shape = tuple(cap_sh["ids"].shape)[k:]
@@ -727,12 +837,19 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
         T = _prod(ids_shape[1:])
         D = app_dy[-1]
         V = vocab or T
-        pbytes = V * D * BYTES * stack
-        stash_bytes = Bl * V * D * BYTES * stack
+        # A vocab-sharded table keeps V/msh rows per model shard; the
+        # same-token Gram and segsum norms see only locally-owned rows,
+        # so their partial norms psum over the model axes.
+        msh = msize if msize > 1 and V % msize == 0 else 1
+        Vl = V // msh
+        pbytes = Vl * D * BYTES * stack
+        stash_bytes = Bl * Vl * D * BYTES * stack
         seg_f = (T * max(math.log2(max(T, 2)), 1.0) + 2.0 * T * D)
-        costs = {"pe": Bl * (T * D + V * D) * stack + _move_cost(stash_bytes),
-                 "gram": 2.0 * Bl * T * T * D * stack + _scal_cost(B),
-                 "segsum": Bl * seg_f * stack + _scal_cost(B)}
+        costs = {"pe": Bl * (T * D + Vl * D) * stack
+                 + _move_cost(stash_bytes),
+                 "gram": 2.0 * Bl * T * T * D * stack
+                 + _scal_cost(B, msh > 1),
+                 "segsum": Bl * seg_f * stack + _scal_cost(B, msh > 1)}
         if embed_method != "auto":
             m = embed_method
         elif not mesh:
@@ -745,13 +862,14 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
             if m == "pe" and stash_bytes > EMBED_PE_BUDGET:
                 m = "gram" if T <= 32 else "segsum"
         nf = {"gram": 2.0 * Bl * T * T * D,
-              "pe": Bl * (T * D + V * D),
+              "pe": Bl * (T * D + Vl * D),
               "segsum": Bl * seg_f}[m] * stack
         cf = 2.0 * Bl * T * D * stack
         fb = (m if m != "pe" else ("gram" if T <= 32 else "segsum"))
         return LayerPlan(name, "embed", m, m == "pe", nf, cf, cf,
                          stash_bytes=stash_bytes, fallback_norm=fb,
-                         param_bytes=pbytes, ex_per_dev=Bl)
+                         param_bytes=pbytes, ex_per_dev=Bl,
+                         model_shards=msh)
 
     if meta.kind == "scale":
         B = app_dy[0] if app_dy else 1
@@ -869,7 +987,6 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
     overrides = normalize_overrides(overrides)
     ms = mesh_axes(mesh)
     d = mesh_data_size(ms)
-    ring = _ring(d)
     cc = resolve_cost_constants(calibration, ms)
     layers: dict[str, LayerPlan] = {}
     by_path: dict[tuple, list] = {}
@@ -901,7 +1018,8 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
     unique_pbytes = sum(max(layers[n].param_bytes for n in names)
                         for names in by_path.values())
     backward_cost = (BACKWARD_FIXED_FACTOR + 1.0) * total_wgrad \
-        + cc.collective_flops_per_byte * ring * unique_pbytes
+        + sum(cc.coll_price(a) * _ring(s) * unique_pbytes
+              for a, s in mesh_data_axes(ms))
 
     groups: list[GroupPlan] = []
     for path, names in sorted(by_path.items()):
@@ -987,24 +1105,38 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
             if fusable:
                 layers[name] = dataclasses.replace(lp, fused=True)
 
-    # Final per-layer collective prediction for the *chosen* realization:
-    # norm phase (stash movement vs the scalar all-reduce of the *global*
-    # (B,) norms, the same term _scal_cost charged during selection) plus
-    # this layer's share of its group's grad-sync psum — one sync per
-    # parameter, split across the taps that share it, doubled for
-    # weighted-backward groups.
-    if ring > 0.0:
+    # Final per-layer collective prediction for the *chosen* realization,
+    # broken out per mesh axis.  Data axes carry the norm phase (stash
+    # movement vs the scalar all-reduce of the *global* (B,) norms, the
+    # same term _scal_cost charged during selection) plus this layer's
+    # share of its group's grad-sync psum — one sync per parameter, split
+    # across the taps that share it, doubled for weighted-backward
+    # groups.  Model axes carry the partial-norm psum of tensor-sharded
+    # layers: their (B,) per-example norms are assembled from partial
+    # Grams living on every model shard.
+    if ms:
         for g in groups:
             group_pb = max(layers[n].param_bytes for n in g.members)
-            sync_each = group_pb * ring \
+            sync_each = group_pb \
                 * (2.0 if g.sum_method == "backward" else 1.0) \
                 / len(g.members)
             for name in g.members:
                 lp = layers[name]
-                norm_coll = (lp.stash_bytes if lp.stash
-                             else lp.ex_per_dev * d * BYTES) * ring
+                norm_bytes = (lp.stash_bytes if lp.stash
+                              else lp.ex_per_dev * d * BYTES)
+                by_axis = []
+                for a, s in ms:
+                    r = _ring(s)
+                    if a in DATA_AXIS_NAMES:
+                        b = (norm_bytes + sync_each) * r
+                    else:
+                        b = (lp.ex_per_dev * d * BYTES * r
+                             if lp.model_shards > 1 else 0.0)
+                    if b > 0.0:
+                        by_axis.append((a, b))
                 layers[name] = dataclasses.replace(
-                    lp, coll_bytes=norm_coll + sync_each)
+                    lp, coll_bytes=sum(b for _, b in by_axis),
+                    coll_bytes_by_axis=tuple(by_axis))
 
     capture_bytes = 0.0
     for name in metas:
@@ -1015,6 +1147,11 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
             capture_bytes += 2.0 * _nbytes(ts)   # tap zeros + cotangent
     capture_bytes /= d   # captures are batch-sharded: per-device share
 
+    axis_totals: dict[str, float] = {}
+    for lp in layers.values():
+        for a, b in lp.coll_bytes_by_axis:
+            axis_totals[a] = axis_totals.get(a, 0.0) + b
+
     return ExecPlan(
         groups=tuple(groups), layers=layers, metas=metas,
         make_taps=make_taps, needs_backward=needs_backward,
@@ -1022,7 +1159,9 @@ def plan_execution(metas: dict, cap_shapes: dict, tap_shapes: dict,
         total_contrib_flops=sum(lp.contrib_flops for lp in layers.values()),
         tap_shapes=dict(tap_shapes), capture_bytes=capture_bytes,
         mesh=ms, clip_mode=clip_mode, calibration=cc.calibration,
-        total_coll_bytes=sum(lp.coll_bytes for lp in layers.values()))
+        total_coll_bytes=sum(lp.coll_bytes for lp in layers.values()),
+        total_coll_bytes_by_axis=tuple(
+            (a, axis_totals[a]) for a, _ in ms if a in axis_totals))
 
 
 # ---------------------------------------------------------------------------
@@ -1340,7 +1479,11 @@ def predicted_step_flops(plan: ExecPlan, cc: CostConstants | None = None
         + plan.total_norm_flops + plan.total_contrib_flops
     if plan.needs_backward:
         flops += (BACKWARD_FIXED_FACTOR + 1.0) * total_wgrad
-    flops += cc.collective_flops_per_byte * plan.total_coll_bytes
+    if plan.total_coll_bytes_by_axis:
+        flops += sum(cc.coll_price(a) * b
+                     for a, b in plan.total_coll_bytes_by_axis)
+    else:
+        flops += cc.collective_flops_per_byte * plan.total_coll_bytes
     return flops
 
 

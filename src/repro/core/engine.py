@@ -121,9 +121,21 @@ class PrivacyEngine:
                   axes, params/opt/key replicated).  A mesh *spec*
                   (``"data:8"``, axes dict/tuple) plans for that topology
                   without requiring the devices (no sharded execution).
+      param_axes: the logical-axes pytree ``model.init`` returns next to
+                  the params.  On a mesh with model axes this partitions
+                  params (and congruent optimizer moments) per
+                  ``launch.sharding.PARAM_RULES`` — tensor-sharded
+                  dense/conv layers then *execute* sharded.  Ignored on
+                  pure-data meshes.
       calibration: measured cost constants for planning.  ``None``
                   consults the process registry for (live hardware,
-                  mesh); a ``repro.calibrate.Calibration`` is validated
+                  mesh); on a mesh with model axes a registry miss
+                  auto-measures once per (hardware, mesh) per process
+                  (a 2D plan priced from ``ANALYTIC_FALLBACK`` would
+                  invent the data/model bandwidth ratio); pass
+                  ``"analytic"`` to explicitly opt out and plan from the
+                  analytic constants.  A ``repro.calibrate.Calibration``
+                  is validated
                   strictly against the live hardware and this mesh
                   (named errors on mismatch); a path string loads a
                   stored blob *softly* — unusable blobs degrade to the
@@ -157,7 +169,7 @@ class PrivacyEngine:
                  sampling_rate: float | None = None,
                  accountant: PrivacyAccountant | None = None,
                  plan: costmodel.ExecPlan | None = None,
-                 mesh=None, run_seed: int | None = None,
+                 mesh=None, param_axes=None, run_seed: int | None = None,
                  calibration=None,
                  mispredict_threshold: float | None = 0.5,
                  monitor=None):
@@ -176,6 +188,7 @@ class PrivacyEngine:
         self.accountant = accountant
         self.mesh = mesh if isinstance(mesh, jax.sharding.Mesh) else None
         self._mesh_axes = costmodel.mesh_axes(mesh)
+        self._param_axes = param_axes
         if self.mesh is not None:
             d = costmodel.mesh_data_size(self._mesh_axes)
             for kp, leaf in jax.tree_util.tree_leaves_with_path(
@@ -221,8 +234,31 @@ class PrivacyEngine:
         """See ``calibration`` in the class docstring: registry lookup /
         strict Calibration / ``"measure"`` / soft path load."""
         from repro import calibrate
+        if calibration == "analytic":
+            return None
         if calibration is None:
-            return calibrate.lookup(self._mesh_axes)
+            calib = calibrate.lookup(self._mesh_axes)
+            if calib is not None:
+                return calib
+            # 2D-mesh default: a fresh engine on a data×model mesh would
+            # otherwise price the model axis from ANALYTIC_FALLBACK (the
+            # PR-8 follow-up) — measure once per (hardware, mesh) per
+            # process.  1D meshes keep the analytic default: their single
+            # ring has no cross-axis ratio to get wrong, and measuring
+            # would perturb plan fingerprints test/CI lanes pin.
+            if (self.mesh is not None
+                    and costmodel.mesh_model_axes(self._mesh_axes)):
+                import warnings
+                try:
+                    return calibrate.get_or_measure(self._mesh_axes)
+                except calibrate.CalibrationError as e:
+                    warnings.warn(
+                        f"auto-calibration for mesh "
+                        f"{costmodel.format_mesh(self._mesh_axes)} failed "
+                        f"({type(e).__name__}: {e}); planning with the "
+                        f"analytic fallback constants",
+                        calibrate.CalibrationFallbackWarning, stacklevel=2)
+            return None
         if isinstance(calibration, calibrate.Calibration):
             calibration.validate_for(calibrate.hardware_signature(),
                                      self._mesh_axes)
@@ -309,7 +345,8 @@ class PrivacyEngine:
         old = self._calibration
         old_plan = self.plan()
         new = old.retimed(predicted_s=predicted_s, measured_s=measured_s,
-                          coll_bytes=old_plan.total_coll_bytes)
+                          coll_bytes=old_plan.total_coll_bytes,
+                          coll_bytes_by_axis=old_plan.total_coll_bytes_by_axis)
         calibrate.register(new)
         self._calibration = new
         self._plan = None
@@ -587,15 +624,34 @@ class PrivacyEngine:
 
     def _step_shardings(self):
         """(in_shardings, out_shardings) for the jitted step, or ``None``
-        off-mesh.  Batch over the data axes; params, optimizer state, PRNG
-        key, clip state, and every output replicated."""
+        off-mesh.  Batch over the data axes; PRNG key, clip state, loss
+        and aux replicated.  Params (and congruent optimizer moments) are
+        replicated on a pure-data mesh; with ``param_axes=`` on a mesh
+        that has model axes they are partitioned per the logical-axis
+        rules (``launch.sharding.PARAM_RULES``), so tensor-sharded layers
+        execute sharded: XLA inserts the partial-Gram / norm psums over
+        ``model`` and the noise — drawn from the one replicated key, with
+        value-semantic counter-based PRNG — lands sharded consistently
+        with the param layout."""
         if self.mesh is None:
             return None
-        from repro.launch.sharding import batch_sharding
+        from repro.launch.sharding import batch_sharding, param_sharding
         from jax.sharding import NamedSharding, PartitionSpec as P
         repl = NamedSharding(self.mesh, P())
         batch_sh = batch_sharding(self._batch_spec, self.mesh)
-        return (repl, repl, batch_sh, repl, repl), repl
+        if (self._param_axes is None
+                or not costmodel.mesh_model_axes(self._mesh_axes)):
+            return (repl, repl, batch_sh, repl, repl), repl
+        param_sh = param_sharding(self._param_axes, self.mesh,
+                                  shapes_tree=self._params_spec)
+        # Optimizer moments inherit the param layout (ZeRO-style: every
+        # moment shard lives once); unknown custom optimizer states stay
+        # replicated — correct, just not partitioned.
+        opt_sh = {"adamw": {"m": param_sh, "v": param_sh, "step": repl},
+                  "sgdm": {"mom": param_sh, "step": repl},
+                  }.get(self._optimizer_name, repl)
+        return ((param_sh, opt_sh, batch_sh, repl, repl),
+                (param_sh, opt_sh, repl, repl))
 
     @functools.cached_property
     def _jit_step(self):

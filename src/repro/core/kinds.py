@@ -15,6 +15,18 @@ generalization of the paper's empirical crb-vs-multi crossover.  The
 choice between the two is made by :mod:`repro.core.costmodel`.
 
 All reductions accumulate in float32 regardless of capture dtype.
+
+Tensor parallelism (2D data x model meshes) needs **no algebra change**
+here: the kinds are written in the global view, and when the engine
+partitions a layer's params over the ``model`` axis (out-features for
+dense, out-channels for conv, vocab rows for embed), GSPMD shards the
+same contractions — each device's Gram/ghost contraction runs over its
+local out-feature slice, and because ``‖g_b‖²`` is a sum over
+out-features the per-example norms XLA assembles are exactly the psum
+of the partial-Gram terms.  ``contrib``'s weighted sums shard the same
+way (each shard owns its slice of the clipped sum).  The per-axis
+collective cost of those psums is priced by
+:mod:`repro.core.costmodel` (``LayerPlan.coll_bytes_by_axis``).
 """
 from __future__ import annotations
 

@@ -30,6 +30,16 @@ The paper's three strategies plus the production extensions:
 ``apply_fn(params, batch, tapper) -> (B,) per-example losses`` is the only
 contract a model must satisfy.  Execution counts (forwards / backwards /
 probes) are tracked in :data:`repro.core.tapper.STATS`.
+
+Sharded execution is the same code: strategies stay global-view pure
+``jnp``, and the engine's declared in/out shardings (batch over the
+data axes; params over ``model`` when tensor-sharded) make GSPMD insert
+the collectives — per-example norm partials psum over ``model``, the
+(B,)-scalar norms all-reduce over the data axes exactly once per layer
+group, and the clipped+noised update all-reduces back to
+data-replicated.  Nothing in this module branches on the mesh; the
+planner (:mod:`repro.core.costmodel`) prices each of those collectives
+on the axis it actually crosses.
 """
 from __future__ import annotations
 

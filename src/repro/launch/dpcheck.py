@@ -62,10 +62,11 @@ def _build_engine(arch: str, clip_mode: str, mesh_spec, *,
             raise SystemExit(f"--batch {batch} not divisible by the "
                              f"mesh's data degree {d}")
     batch_fn = make_batch_fn(cfg, batch, seq)
-    params0, _ = model.init(jax.random.PRNGKey(0))
+    params0, axes0 = model.init(jax.random.PRNGKey(0))
     return PrivacyEngine(model.apply, params0, batch_fn(0), dp=dpc,
                          optimizer="adamw", lr=1e-3, weight_decay=0.01,
-                         mesh=mesh, run_seed=run_seed)
+                         mesh=mesh, param_axes=axes0, run_seed=run_seed,
+                         calibration="analytic")
 
 
 def main(argv=None):

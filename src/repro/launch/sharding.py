@@ -5,6 +5,13 @@ Models annotate activations with *logical* axes ("batch", "seq", "embed",
 tuples built at init time.  A rules table maps logical axes to mesh axes.
 Outside a mesh context every annotation is a no-op, so models stay
 mesh-agnostic.
+
+``PrivacyEngine(param_axes=...)`` routes its params — and the adamw/sgdm
+optimizer moments, which inherit the param layout — through
+:func:`param_sharding` whenever the mesh has a ``model`` axis, so the 2D
+(data × model) private step executes tensor-sharded end to end; the
+``shapes_tree`` divisibility fallback is what lets odd-width heads stay
+replicated next to a sharded trunk (see ``core.engine._step_shardings``).
 """
 from __future__ import annotations
 

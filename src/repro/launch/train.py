@@ -116,7 +116,10 @@ def main(argv=None):
                     help="plan cache file: loaded if present (skips the "
                          "probe), written after planning otherwise")
     ap.add_argument("--calibration", default=None,
-                    help="measured cost constants: a calibration JSON "
+                    help="'analytic' plans from the analytic constants "
+                         "(the explicit opt-out; meshes with model axes "
+                         "otherwise auto-measure at first engine init); "
+                         "measured cost constants: a calibration JSON "
                          "path (written by `python -m benchmarks."
                          "kernels_bench --calibrate-only`; unusable blobs "
                          "fall back to analytic constants with a named "
@@ -219,7 +222,7 @@ def main(argv=None):
         if live_axes:
             mesh = make_mesh_from_spec(
                 ",".join(f"{n}:{s}" for n, s in live_axes))
-    params0, _ = model.init(jax.random.PRNGKey(0))
+    params0, axes0 = model.init(jax.random.PRNGKey(0))
     # One monitor for the whole run: stragglers (and re-plan events)
     # survive restarts instead of being read off a fresh StepMonitor at
     # the end (and they survive *process* deaths too — the monitor rides
@@ -229,7 +232,7 @@ def main(argv=None):
         model.apply, params0, batch_fn(0), dp=dpc, optimizer="adamw",
         lr=lambda step: cosine_schedule(step, warmup=10, total=args.steps,
                                         peak=args.lr),
-        weight_decay=0.01, accountant=acct, mesh=mesh,
+        weight_decay=0.01, accountant=acct, mesh=mesh, param_axes=axes0,
         run_seed=args.run_seed, calibration=args.calibration,
         mispredict_threshold=(args.mispredict_threshold
                               if args.mispredict_threshold > 0 else None),

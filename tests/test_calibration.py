@@ -524,3 +524,54 @@ def test_sharded_replan_continues_training(toy_model):
     assert eng.accountant.steps == STEPS
     assert all(bool(jnp.all(jnp.isfinite(x)))
                for x in jax.tree.leaves(got_p))
+
+
+# ---------------------------------------------------------------------------
+# Per-axis retiming (2D meshes)
+
+
+def test_retimed_prices_old_wire_share_per_axis():
+    """With a per-axis byte breakdown, retiming computes the old wire
+    share on the axes the traffic actually crossed and rescales every
+    measured bandwidth so the new prediction closes the gap exactly."""
+    calib = calibrate.injected(
+        mesh="data:4,model:2", flops_per_second=1e12,
+        collective_bytes_per_second={"data": 16e9, "model": 2e9})
+    by_axis = (("data", 64 * 2**20), ("model", 8 * 2**20))
+    total = sum(b for _, b in by_axis)
+    wire_old = sum(b / {"data": 16e9, "model": 2e9}[a] for a, b in by_axis)
+    predicted = wire_old + 2e-3          # 2 ms of compute
+    measured = 2.0 * wire_old + 2e-3     # wire twice as slow as measured
+    new = calib.retimed(predicted_s=predicted, measured_s=measured,
+                        coll_bytes=total, coll_bytes_by_axis=by_axis)
+    # both axes rescaled by the same factor (the observed wire slowdown)
+    assert new.collective_bytes_per_second["data"] == pytest.approx(8e9)
+    assert new.collective_bytes_per_second["model"] == pytest.approx(1e9)
+    # the compute rate is untouched — the wire absorbed the whole gap
+    assert new.flops_per_second == calib.flops_per_second
+    assert new.source == "replan"
+
+
+def test_retimed_per_axis_emits_no_axisless_fallback_warning():
+    import warnings as _w
+    calib = calibrate.injected(
+        mesh="data:4,model:2", flops_per_second=1e12,
+        collective_bytes_per_second={"data": 16e9, "model": 2e9})
+    by_axis = (("data", 2**20), ("model", 2**18))
+    with _w.catch_warnings():
+        _w.simplefilter("error",
+                        calibrate.CalibrationAxisFallbackWarning)
+        calib.retimed(predicted_s=1e-3, measured_s=2e-3,
+                      coll_bytes=2**20 + 2**18, coll_bytes_by_axis=by_axis)
+
+
+def test_retimed_without_wire_share_falls_back_to_flop_rate():
+    """Zero collective traffic: nothing to attribute to the wire — the
+    FLOP rate absorbs the divergence (also the legacy axis-less path)."""
+    calib = calibrate.injected(
+        mesh="data:4,model:2", flops_per_second=1e12,
+        collective_bytes_per_second={"data": 16e9, "model": 2e9})
+    new = calib.retimed(predicted_s=1e-3, measured_s=2e-3, coll_bytes=0.0)
+    assert new.flops_per_second == pytest.approx(5e11)
+    assert new.collective_bytes_per_second \
+        == calib.collective_bytes_per_second

@@ -737,3 +737,121 @@ def test_sharded_stale_passes_oracle(dtype):
             np.testing.assert_allclose(np.asarray(g, np.float32),
                                        np.asarray(w, np.float32),
                                        **_sum_tol(dtype, scale))
+
+
+# ---------------------------------------------------------------------------
+# 2D (data x model) meshes: tensor-sharded layers pass the same oracle
+
+_CONV_2D_AXES = {"c": {"w": ("mlp", None, None, "conv_k"), "b": ("mlp",)}}
+_CONV_HEAD_2D_AXES = {"c": {"w": ("mlp", None, None, "conv_k"),
+                            "b": ("mlp",)},
+                      "head": {"w": ("embed", "mlp")}}
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8")
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_sharded_2d_engine_passes_oracle(dtype):
+    """data:4,model:2 — conv params partitioned over the model axis
+    (out-channels), batch over data.  GSPMD psums the partial-Gram norm
+    contributions over ``model`` and the (B,) norms over ``data``; the
+    tensor-sharded step's clipped mean gradient must still match the
+    naive Jacobian oracle exactly."""
+    from repro.core import DPConfig, PrivacyEngine
+
+    apply_fn, params, batch = conv_model(dtype, CONV_GEOMS[1], B=8, seed=7)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    C = 0.1
+    engine = PrivacyEngine(apply_fn, params, batch, dp=DPConfig(l2_clip=C),
+                           optimizer=_grad_extracting_optimizer, mesh=mesh,
+                           param_axes=_CONV_2D_AXES, calibration="analytic")
+    got_grad, _, _, _ = engine.private_step(params, {"step": jnp.zeros(())},
+                                            batch)
+    # the step really is tensor-sharded: conv weight partitioned on its
+    # out-channel dim, not replicated
+    w_spec = got_grad["c"]["w"].sharding.spec
+    assert tuple(w_spec)[:1] == ("model",), w_spec
+    B = batch["x"].shape[0]
+    want = _oracle_clipped_sum(apply_fn, params, batch, C)
+    want_grad = jax.tree.map(lambda g: g / B, want)
+    scale = max(max(float(jnp.abs(w).max())
+                    for w in jax.tree.leaves(want_grad)), 1e-3)
+    for g, w in zip(jax.tree.leaves(got_grad), jax.tree.leaves(want_grad)):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   **_sum_tol(dtype, scale))
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8")
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_sharded_2d_per_layer_passes_oracle(dtype):
+    """Per-layer clipping on the 2D mesh: each group's per-example norm
+    is psum'd over both axes exactly once (model partials + data
+    examples) before the coefficients, matching the per-layer oracle.
+    The 3-wide head does not divide the model axis and stays replicated
+    — the mixed sharded/replicated layout is the production case."""
+    from repro.core import ClipPolicy, DPConfig, PrivacyEngine
+
+    apply_fn, params, batch = conv_plus_head_model(dtype, CONV_GEOMS[1],
+                                                   B=8, seed=7)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    C = 0.1
+    engine = PrivacyEngine(
+        apply_fn, params, batch,
+        dp=DPConfig(l2_clip=C, clipping=ClipPolicy(mode="per_layer")),
+        optimizer=_grad_extracting_optimizer, mesh=mesh,
+        param_axes=_CONV_HEAD_2D_AXES, calibration="analytic")
+    got_grad, _, _, aux = engine.private_step(
+        params, {"step": jnp.zeros(())}, batch)
+    assert tuple(got_grad["c"]["w"].sharding.spec)[:1] == ("model",)
+    assert got_grad["head"]["w"].sharding.is_fully_replicated
+    B = batch["x"].shape[0]
+    want = _oracle_per_layer_clipped_sum(apply_fn, params, batch, C)
+    want_grad = jax.tree.map(lambda g: g / B, want)
+    assert aux["per_layer_clip_fraction"].shape == (2,)
+    scale = max(max(float(jnp.abs(w).max())
+                    for w in jax.tree.leaves(want_grad)), 1e-3)
+    for g, w in zip(jax.tree.leaves(got_grad), jax.tree.leaves(want_grad)):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   **_sum_tol(dtype, scale))
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8")
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_sharded_2d_stale_passes_oracle(dtype):
+    """Stale clipping on the 2D mesh: bootstrap and steady step (lagged
+    norms == current norms on a repeated batch) both match the flat
+    oracle with tensor-sharded params."""
+    from repro.core import ClipPolicy, DPConfig, PrivacyEngine
+
+    apply_fn, params, batch = conv_plus_head_model(dtype, CONV_GEOMS[1],
+                                                   B=8, seed=7)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    C = 0.1
+    engine = PrivacyEngine(
+        apply_fn, params, batch,
+        dp=DPConfig(l2_clip=C, clipping=ClipPolicy(mode="stale")),
+        optimizer=_grad_extracting_optimizer, mesh=mesh,
+        param_axes=_CONV_HEAD_2D_AXES, calibration="analytic")
+    opt0 = {"step": jnp.zeros(())}
+    B = batch["x"].shape[0]
+    want = _oracle_clipped_sum(apply_fn, params, batch, C)
+    want_grad = jax.tree.map(lambda g: g / B, want)
+    scale = max(max(float(jnp.abs(w).max())
+                    for w in jax.tree.leaves(want_grad)), 1e-3)
+    boot_grad, _, _, _ = engine.private_step(params, opt0, batch)
+    steady_grad, _, _, _ = engine.private_step(params, opt0, batch)
+    for got in (boot_grad, steady_grad):
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want_grad)):
+            np.testing.assert_allclose(np.asarray(g, np.float32),
+                                       np.asarray(w, np.float32),
+                                       **_sum_tol(dtype, scale))

@@ -308,3 +308,230 @@ def test_live_mesh_and_spec_plan_identically(toy_model):
     fp_spec = costmodel.plan_fingerprint(apply_fn, params, batch,
                                          mesh="data:8")
     assert fp_live == fp_spec
+
+
+# ---------------------------------------------------------------------------
+# 2D (data x model) meshes: per-axis pricing + tensor-sharded execution
+
+
+def test_mesh_axes_drop_unit_axes():
+    """Size-1 axes execute identically to their absence; they must not
+    make a stored plan fail safe spuriously."""
+    assert costmodel.mesh_axes("data:8,model:1") == (("data", 8),)
+    assert costmodel.mesh_axes((("data", 8), ("model", 1))) == (("data", 8),)
+    assert costmodel.mesh_axes({"data": 8, "model": 1}) == (("data", 8),)
+    assert costmodel.mesh_axes("data:1") == ()
+
+
+def test_check_plan_matches_ignores_unit_axes(toy_model):
+    apply_fn, params, batch = toy_model
+    plan = costmodel.get_plan(apply_fn, params, batch, mesh="data:8")
+    # identical topology spelled with a trivial model axis: no error
+    costmodel.check_plan_matches(plan, mesh="data:8,model:1")
+    with pytest.raises(ValueError, match="mesh shape mismatch"):
+        costmodel.check_plan_matches(plan, mesh="data:8,model:2")
+
+
+def test_mesh_model_axis_helpers():
+    axes = (("data", 4), ("model", 2))
+    assert costmodel.mesh_data_axes(axes) == (("data", 4),)
+    assert costmodel.mesh_model_axes(axes) == (("model", 2),)
+    assert costmodel.mesh_model_size(axes) == 2
+    assert costmodel.mesh_model_axes((("pod", 2), ("data", 4))) == ()
+
+
+def test_axisless_pricing_warns_on_multi_axis_calibration():
+    import warnings as _w
+    from repro import calibrate
+    c = calibrate.injected(
+        mesh="data:4,model:2", flops_per_second=1e12,
+        collective_bytes_per_second={"data": 16e9, "model": 2e9})
+    with pytest.warns(calibrate.CalibrationAxisFallbackWarning):
+        v = c.collective_flops_per_byte()
+    assert v == pytest.approx(1e12 / 2e9)        # slowest axis
+    assert c.collective_flops_per_byte("data") == pytest.approx(1e12 / 16e9)
+    # legacy single-axis calibrations keep the silent fallback
+    c1 = calibrate.injected(mesh="data:8", flops_per_second=1e12,
+                            collective_bytes_per_second=16e9)
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        assert c1.collective_flops_per_byte() == pytest.approx(1e12 / 16e9)
+
+
+def test_2d_per_axis_collective_pricing_hand_computed():
+    """Acceptance: with data/model bandwidths 8x apart, the planned
+    collective cost of tensor-sharded llama32_1b layers is the per-axis
+    sum — scalar norms priced on the data ring, partial-Gram psums on
+    the model ring — never the slowest-axis scalar, and planning never
+    takes the axis-less fallback."""
+    import dataclasses as _dc
+    import warnings as _w
+    from repro import calibrate
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+
+    cfg = get_config("llama3.2-1b").reduced()
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda k: model.init(k)[0],
+                            jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.zeros((8, 16), jnp.int32),
+             "labels": jnp.zeros((8, 16), jnp.int32)}
+    calib = calibrate.injected(
+        mesh="data:4,model:2", flops_per_second=1e12,
+        collective_bytes_per_second={"data": 16e9, "model": 2e9})
+    with _w.catch_warnings():
+        _w.simplefilter("error", calibrate.CalibrationAxisFallbackWarning)
+        plan = costmodel.get_plan(model.apply, params, batch,
+                                  mesh="data:4,model:2", calibration=calib)
+    sharded = {n: lp for n, lp in plan.layers.items()
+               if lp.model_shards > 1}
+    assert sharded, "no tensor-sharded layer planned for llama32_1b"
+    d = 4                 # data-parallel degree: B = ex_per_dev * d
+    ring_d = 2.0 * (4 - 1) / 4              # data:4 ring factor
+    ring_m = 2.0 * (2 - 1) / 2              # model:2 ring factor
+    by_group = {m: g for g in plan.groups for m in g.members}
+    for name, lp in sharded.items():
+        g = by_group[name]
+        group_pb = max(plan.layers[m].param_bytes for m in g.members)
+        sync = group_pb * (2.0 if g.sum_method == "backward" else 1.0) \
+            / len(g.members)
+        norm_bytes = (lp.stash_bytes if lp.stash
+                      else lp.ex_per_dev * d * 4)
+        want = {"data": (norm_bytes + sync) * ring_d,
+                "model": lp.ex_per_dev * d * 4 * ring_m}
+        assert dict(lp.coll_bytes_by_axis) == pytest.approx(want), name
+        assert lp.coll_bytes == pytest.approx(sum(want.values())), name
+    # the predicted cost prices each axis at its own bandwidth
+    cc = costmodel.resolve_cost_constants(calib, plan.mesh)
+    assert cc.coll_price("data") == pytest.approx(1e12 / 16e9)
+    assert cc.coll_price("model") == pytest.approx(1e12 / 2e9)
+    no_coll = _dc.replace(plan, total_coll_bytes=0.0,
+                          total_coll_bytes_by_axis=())
+    coll_flops = costmodel.predicted_step_flops(plan, cc) \
+        - costmodel.predicted_step_flops(no_coll, cc)
+    want_flops = sum(cc.coll_price(a) * b
+                     for a, b in plan.total_coll_bytes_by_axis)
+    assert coll_flops == pytest.approx(want_flops)
+    # slowest-axis pricing (the old bug) would overcharge the data traffic
+    slowest_flops = cc.collective_flops_per_byte * plan.total_coll_bytes
+    assert want_flops < slowest_flops
+
+
+def test_2d_plan_payload_roundtrips_per_axis_bytes(toy_model):
+    apply_fn, params, batch = toy_model
+    plan = costmodel.get_plan(apply_fn, params, batch,
+                              mesh="data:4,model:2")
+    assert plan.total_coll_bytes_by_axis
+    assert dict(plan.total_coll_bytes_by_axis)["data"] > 0
+    restored = ExecPlan.from_json(plan.to_json())
+    assert restored == plan
+    assert restored.total_coll_bytes_by_axis == plan.total_coll_bytes_by_axis
+    for n, lp in plan.layers.items():
+        assert restored.layers[n].coll_bytes_by_axis == lp.coll_bytes_by_axis
+        assert restored.layers[n].model_shards == lp.model_shards
+    # explain() surfaces the per-axis breakdown
+    assert "per axis:" in plan.explain()
+
+
+def test_planning_only_2d_mesh_never_auto_measures(toy_model, monkeypatch):
+    """A mesh *spec* plans for a topology this host doesn't have — it
+    must not try to measure it; 'analytic' is the explicit opt-out on a
+    live mesh too."""
+    from repro import calibrate
+
+    def boom(*a, **k):
+        raise AssertionError("measure() ran for a planning-only engine")
+
+    monkeypatch.setattr(calibrate, "measure", boom)
+    apply_fn, params, batch = toy_model
+    eng = PrivacyEngine(apply_fn, params, batch, mesh="data:4,model:2")
+    assert eng.calibration is None
+    eng2 = PrivacyEngine(apply_fn, params, batch, mesh="data:4,model:2",
+                         calibration="analytic")
+    assert eng2.calibration is None
+
+
+@pytest.mark.multidevice
+@needs_8_devices
+def test_2d_engine_auto_calibrates_by_default(toy_model, monkeypatch):
+    """PR-8 follow-up: a fresh engine on a live 2D mesh must not price
+    the model axis from ANALYTIC_FALLBACK — absent a registered
+    calibration it measures once per (hardware, mesh) per process."""
+    from repro import calibrate
+
+    apply_fn, params, batch4 = toy_model
+    batch = _batch8(batch4)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    calls = []
+    fake = calibrate.injected(
+        mesh="data:4,model:2",
+        collective_bytes_per_second={"data": 8e9, "model": 2e9})
+
+    def fake_measure(mesh=None, quick=True):
+        calls.append(costmodel.mesh_axes(mesh))
+        return fake
+
+    monkeypatch.setattr(calibrate, "measure", fake_measure)
+    calibrate.clear_registry()
+    try:
+        costmodel.clear_plan_cache()
+        eng = PrivacyEngine(apply_fn, params, batch, mesh=mesh)
+        assert eng.calibration is fake
+        assert calls == [(("data", 4), ("model", 2))]
+        # second engine: registry hit, no re-measure
+        eng2 = PrivacyEngine(apply_fn, params, batch, mesh=mesh)
+        assert eng2.calibration is fake and len(calls) == 1
+        # explicit opt-out
+        eng3 = PrivacyEngine(apply_fn, params, batch, mesh=mesh,
+                             calibration="analytic")
+        assert eng3.calibration is None
+    finally:
+        calibrate.clear_registry()
+        costmodel.clear_plan_cache()
+
+
+@pytest.mark.multidevice
+@needs_8_devices
+@pytest.mark.parametrize("arch", ("alexnet", "llama3.2-1b"))
+def test_sharded_2d_private_step_matches_single_device(arch):
+    """Acceptance: private_step on data:4,model:2 with tensor-sharded
+    params equals the single-device reference — noise included (the one
+    replicated key; partitionable threefry makes the sharded draw
+    value-identical) — for a CNN and llama32_1b."""
+    from repro.configs import get_config
+    from repro.launch.train import make_batch_fn
+    from repro.models.registry import build_model
+    from repro.optim import sgdm_init
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    batch_fn = make_batch_fn(cfg, 8, 32)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    dp = DPConfig(l2_clip=1.0, noise_multiplier=0.8)
+    costmodel.clear_plan_cache()
+    e1 = PrivacyEngine(model.apply, params, batch_fn(0), dp=dp,
+                       optimizer="sgdm", lr=1e-2, run_seed=7,
+                       sampling_rate=0.01, calibration="analytic")
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    costmodel.clear_plan_cache()
+    e2 = PrivacyEngine(model.apply, params, batch_fn(0), dp=dp,
+                       optimizer="sgdm", lr=1e-2, mesh=mesh,
+                       param_axes=axes, run_seed=7, sampling_rate=0.01,
+                       calibration="analytic")
+    p1, o1 = params, sgdm_init(params)
+    p2, o2 = params, sgdm_init(params)
+    for step in range(2):
+        p1, o1, l1, _ = e1.private_step(p1, o1, batch_fn(step), step=step)
+        p2, o2, l2, _ = e2.private_step(p2, o2, batch_fn(step), step=step)
+        assert abs(float(l1) - float(l2)) < 1e-5
+    assert tree_maxdiff(p1, p2) < 1e-6
+    # identical accountant ledgers
+    assert e1.accountant.steps == e2.accountant.steps
+    assert e1.epsilon(1e-5) == e2.epsilon(1e-5)
+    # params really partitioned over the model axis
+    assert any(not leaf.sharding.is_fully_replicated
+               for leaf in jax.tree.leaves(p2))
+    # all analysis lanes pass on the 2D mesh
+    report = e2.verify()
+    assert not report.errors, report.errors
+    assert "partitioned over model" in report.checked["sharding"]
