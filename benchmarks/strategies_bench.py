@@ -188,6 +188,73 @@ def run_clip_modes(out_path: str = "BENCH_strategies.json") -> dict:
     return results
 
 
+def run_attn(out_path: str = "BENCH_strategies.json") -> dict:
+    """Attention-block realization benchmark: the block-level ghost norm
+    (layer-local recompute + Gram-style reduction; per-example attention
+    gradients never materialized) vs the materializing ``pe`` baseline on
+    the same ``dp_attn``-tapped model, plus the planned engine surface
+    (whose plan should pick ghost for the attention blocks).  Entries
+    merge into the strategy benchmark's JSON under ``{config}@dp_attn``;
+    ghost no slower than pe is the acceptance bar."""
+    from repro.core import clipped_grad_sum
+
+    results = {}
+    if os.path.exists(out_path):
+        results = json.load(open(out_path))
+    s = SETTINGS["llama32_1b"]
+    rng = np.random.RandomState(0)
+    cfg = get_config("llama3.2-1b").reduced().replace(dp_attn=True)
+    model = build_model(cfg)
+    batch = {"tokens": jnp.array(
+                 rng.randint(0, cfg.vocab, (s["B"], s["seq"]))),
+             "labels": jnp.array(
+                 rng.randint(0, cfg.vocab, (s["B"], s["seq"])))}
+    params, _ = model.init(jax.random.PRNGKey(0))
+
+    def norm_fn(method):
+        def f(p, b):
+            _, gsum, _ = clipped_grad_sum(model.apply, p, b, l2_clip=1.0,
+                                          strategy="ghost",
+                                          attn_norm=method)
+            return gsum
+        return jax.jit(f)
+
+    engine = PrivacyEngine(model.apply, params, batch,
+                           dp=DPConfig(l2_clip=1.0, strategy="auto"))
+    fns = {"attn_ghost": norm_fn("ghost"),
+           "attn_pe": norm_fn("pe"),
+           "auto": jax.jit(lambda p, b, _e=engine: _e.noisy_grad(p, b)[:2])}
+    times = {k: float("inf") for k in fns}
+    for rep in range(3):
+        for k, f in fns.items():
+            t = time_fn(f, params, batch, warmup=2 if rep == 0 else 0,
+                        iters=3, reduce="min")
+            times[k] = min(times[k], t)
+    plan = engine.plan()
+    attn_methods = sorted({lp.norm_method
+                           for lp in plan.layers.values()
+                           if lp.kind == "attn"})
+    ratio = times["attn_ghost"] / times["attn_pe"]
+    key = "llama32_1b@dp_attn"
+    results[key] = {
+        "batch": s["B"], "seq": s["seq"],
+        "times_us": times,
+        "ghost_vs_materialize": ratio,
+        "planned_attn_methods": attn_methods,
+        "regression": ratio > 1.0,
+    }
+    for k, t in times.items():
+        emit(f"strategies/{key}/{k}", t, "")
+    emit(f"strategies/{key}/ghost_vs_materialize", times["attn_ghost"],
+         f"ratio={ratio:.3f} planned={','.join(attn_methods)}")
+    if ratio > 1.0:
+        print(f"WARNING: attn ghost norm slower than materialize "
+              f"(ratio {ratio:.3f})", flush=True)
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
 MESH_CONFIGS = ("alexnet", "llama32_1b")
 
 
@@ -339,9 +406,12 @@ def run_mesh(spec: str, out_path: str = "BENCH_strategies.json",
 if __name__ == "__main__":
     argv = sys.argv[1:]
     spec, clip_modes, calib_path, rest, i = None, False, None, [], 0
+    dp_attn = False
     while i < len(argv):
         a = argv[i]
-        if a == "--mesh":
+        if a == "--dp-attn":
+            dp_attn, i = True, i + 1
+        elif a == "--mesh":
             if i + 1 >= len(argv):
                 raise SystemExit("--mesh requires a spec, e.g. "
                                  "--mesh data:8")
@@ -362,5 +432,7 @@ if __name__ == "__main__":
         run_mesh(spec, out, calibration=calib_path)
     elif clip_modes:
         run_clip_modes(out)
+    elif dp_attn:
+        run_attn(out)
     else:
         run(out)

@@ -29,6 +29,7 @@ class ModelConfig:
     norm: str = "rmsnorm"          # rmsnorm | layernorm | layernorm_np
     mlp: str = "swiglu"            # swiglu | gelu
     attn_impl: str = "auto"        # auto | xla | chunked | flash
+    dp_attn: bool = False          # block-level "attn" DP tap (kinds.py)
     # moe
     n_experts: int = 0
     n_shared_experts: int = 0

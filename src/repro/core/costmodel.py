@@ -400,7 +400,7 @@ class GroupPlan:
     sum_method: str                # stash | contrib | backward
 
 
-PLAN_FORMAT_VERSION = 6   # v6: per-mesh-axis collective bytes in payloads
+PLAN_FORMAT_VERSION = 7   # v7: block-level "attn" realization (ghost/pe)
 
 _META_FIELDS = ("kind", "path", "param_key", "bias_key", "w_transposed",
                 "segmented", "scanned", "shared", "static")
@@ -882,6 +882,48 @@ def _plan_layer(name: str, meta: LayerMeta, cap_sh: dict, dy_sh,
                                       if app_dy else 0.0),
                          ex_per_dev=Bl)
 
+    if meta.kind == "attn":
+        # Whole attention block tapped as a unit (gqa/mla dp_attn): the
+        # norm phase recomputes the block forward+backward once (the
+        # layer-local tap-differentiation in kinds._attn_parts costs one
+        # fwd + one bwd of the block, ≈ 3x the projection matmuls plus
+        # the T² score work) and then realizes each projection's norm:
+        # "ghost" runs the inner Gram contractions, "pe" materializes and
+        # stashes per-projection per-example grads so the sum phase is a
+        # free weighted reduction over the stash.
+        x_shape = tuple(cap_sh["x"].shape)[k:]
+        B = x_shape[0]
+        Bl = _shard(B)
+        T = _prod(x_shape[1:-1])
+        proj = tuple(meta.static["proj_dims"])
+        qk = meta.static.get("qk_flops", 0)
+        per_ex = Bl * stack
+        proj_flops = sum(2.0 * T * Di * Do for Di, Do in proj)
+        recompute = 3.0 * (proj_flops + 4.0 * T * T * qk) * per_ex
+        gram = sum(2.0 * T * T * (Di + Do) for Di, Do in proj) * per_ex
+        outer = 2.0 * proj_flops * per_ex
+        psize = sum(Di * Do for Di, Do in proj)
+        mem_stash = Bl * psize * BYTES * stack
+        pbytes = psize * BYTES * stack
+        ghost_total = recompute + gram + _scal_cost(B)
+        pe_stash = recompute + outer + _move_cost(mem_stash)
+        m_req = norm_method if norm_method in ("ghost", "pe") else "auto"
+        stash = False
+        if m_req == "auto":
+            if pe_stash < ghost_total and mem_stash <= mem_budget:
+                m, stash = "pe", True
+            else:
+                m = "ghost"
+        else:
+            m = m_req
+            stash = m == "pe" and mem_stash <= mem_budget
+        nf = recompute + (outer if m == "pe" else gram)
+        cf = recompute + proj_flops * per_ex
+        return LayerPlan(name, "attn", m, stash, nf, cf,
+                         proj_flops * per_ex,
+                         stash_bytes=mem_stash, fallback_norm="ghost",
+                         param_bytes=pbytes, ex_per_dev=Bl)
+
     # local_vjp: a layer-local VJP under vmap.  The norm phase
     # materializes per-example grads and stashes them when the (B, *param)
     # scratch fits the budget, making the sum free.  When the stash is
@@ -918,6 +960,7 @@ _OVERRIDE_METHODS = {
     "dense": {"auto", "gram", "stream", "rank1", "pallas"},
     "embed": {"auto", "segsum", "gram", "pe"},
     "conv": {"auto", "ghost", "pe", "pallas"},
+    "attn": {"auto", "ghost", "pe"},
 }
 
 

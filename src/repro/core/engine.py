@@ -179,6 +179,7 @@ class PrivacyEngine:
         self._batch_spec = _spec_of(batch_spec)
         self._update_fn = _resolve_optimizer(optimizer)
         self._optimizer_name = optimizer if isinstance(optimizer, str) else None
+        self._opt_spec = None   # recorded lazily; see _record_opt_spec
         self._lr = lr
         self._weight_decay = weight_decay
         if accountant is None and sampling_rate is not None:
@@ -645,13 +646,49 @@ class PrivacyEngine:
         param_sh = param_sharding(self._param_axes, self.mesh,
                                   shapes_tree=self._params_spec)
         # Optimizer moments inherit the param layout (ZeRO-style: every
-        # moment shard lives once); unknown custom optimizer states stay
-        # replicated — correct, just not partitioned.
+        # moment shard lives once).  Custom optimizer callables have no
+        # entry in the named table; their layout is derived from the
+        # recorded state pytree instead (see _derived_opt_sharding).
         opt_sh = {"adamw": {"m": param_sh, "v": param_sh, "step": repl},
                   "sgdm": {"mom": param_sh, "step": repl},
-                  }.get(self._optimizer_name, repl)
+                  }.get(self._optimizer_name)
+        if opt_sh is None:
+            opt_sh = self._derived_opt_sharding(param_sh, repl)
         return ((param_sh, opt_sh, batch_sh, repl, repl),
                 (param_sh, opt_sh, repl, repl))
+
+    def _record_opt_spec(self, opt):
+        """Remember the optimizer-state structure so ``_step_shardings``
+        can derive a layout for custom optimizer callables (the named
+        table only covers adamw/sgdm).  Recorded once, from the first
+        ``private_step``/``verify`` call — i.e. before the step closure
+        is first jitted, so the derived shardings reach ``jax.jit``."""
+        if opt is not None and self._opt_spec is None \
+                and self._optimizer_name is None:
+            self._opt_spec = _spec_of(opt)
+
+    def _derived_opt_sharding(self, param_sh, repl):
+        """Sharding for a custom optimizer callable's state, derived from
+        its recorded state pytree: a leaf shaped like a param whose layout
+        is unambiguous inherits that param's sharding (matching the
+        adamw/sgdm moment treatment); scalars and ambiguous shapes stay
+        replicated.  With no recorded spec the whole state is replicated
+        — correct, just not partitioned."""
+        if self._opt_spec is None:
+            return repl
+        by_shape = {}
+        for leaf, sh in zip(jax.tree_util.tree_leaves(self._params_spec),
+                            jax.tree_util.tree_leaves(param_sh)):
+            shape = tuple(leaf.shape)
+            cur = by_shape.get(shape, sh)
+            by_shape[shape] = cur if cur == sh else None   # ambiguous
+
+        def leaf_sh(leaf):
+            shape = tuple(leaf.shape)
+            sh = by_shape.get(shape) if shape else None
+            return sh if sh is not None else repl
+
+        return jax.tree_util.tree_map(leaf_sh, self._opt_spec)
 
     @functools.cached_property
     def _jit_step(self):
@@ -678,6 +715,7 @@ class PrivacyEngine:
         ``raise_on_error=True`` a failed report raises
         :class:`repro.analysis.report.DPVerificationError` instead."""
         from repro.analysis.verifier import verify_engine
+        self._record_opt_spec(opt)
         report = verify_engine(self, opt=opt,
                                coll_bytes_warn=coll_bytes_warn)
         if raise_on_error:
@@ -700,6 +738,7 @@ class PrivacyEngine:
         first step bootstraps with exact flat clipping); ``per_layer``
         with ``budgets="auto"`` re-splits the budget from the tracked
         per-layer norm quantiles after every step."""
+        self._record_opt_spec(opt)
         out = self._jit_step(params, opt, batch, self._check_key(key, step),
                              self._clip_state())
         self._absorb_clip_aux(out[3])

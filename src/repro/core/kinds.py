@@ -30,6 +30,7 @@ collective cost of those psums is priced by
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -38,7 +39,8 @@ import numpy as np
 
 from repro.analysis.markers import tag
 from repro.core import costmodel
-from repro.core.tapper import STATS, LayerMeta
+from repro.core.tapper import (STATS, TAP_KEY, LayerMeta, Tapper,
+                               get_subtree, set_subtree)
 
 F32 = jnp.float32
 
@@ -497,6 +499,98 @@ def conv_contrib(meta: LayerMeta, cap, dy, w):
 
 
 # ---------------------------------------------------------------------------
+# Attention blocks (GQA / MLA, tapped as one "attn" layer)
+#
+# The block tap captures only the block *input* x_b and receives the block
+# *output* cotangent δy_b from the model backward.  A layer-local recompute
+# under an inner Tapper then recovers every projection's (x, δy) pair:
+# differentiating  Σ_b ⟨y_b, δy_b⟩  w.r.t. the inner taps yields exactly the
+# chain-rule cotangents of the true loss at each projection output (δy is
+# constant w.r.t. the taps), after which each projection applies its own
+# dense/scale algebra — the ghost norm never materializes per-example
+# attention gradients, matching the paper's conv derivation ported to the
+# attention contraction.  Like local_vjp this is layer-local recompute, not
+# a whole-model pass: no STATS ticks, the census stays 1 fwd + 1 bwd.
+
+
+def _attn_parts(meta: LayerMeta, cap, dy, params_sub):
+    """Recompute the block, returning (inner_metas, caps, dtaps) with each
+    inner tap's captures and output cotangents.  Inner tap names are rooted
+    at the fixed "blk" prefix (see gqa_apply/mla_apply), so the relative
+    param path of an inner layer is ``meta.path[1:]``."""
+    x = cap["x"]
+    inner_metas: dict[str, LayerMeta] = {}
+
+    def probe_fn(p, xin):
+        tp = Tapper(None, "probe", metas=inner_metas)
+        y = meta.fn(tp, p, xin)
+        return y, tp.captures
+
+    _, cap_sh = jax.eval_shape(probe_fn, params_sub, x)
+    taps = {n: jnp.zeros(c[TAP_KEY].shape, c[TAP_KEY].dtype)
+            for n, c in cap_sh.items() if TAP_KEY in c}
+    dyf = dy.astype(F32)
+
+    def from_taps(t):
+        tp = Tapper(t, "capture", metas={})
+        y = meta.fn(tp, params_sub, x)
+        return jnp.sum(y.astype(F32) * dyf), tp.captures
+
+    (_, caps), dtaps = jax.value_and_grad(from_taps, has_aux=True)(taps)
+    return inner_metas, caps, dtaps
+
+
+def _attn_each(meta: LayerMeta, params_sub, inner_metas):
+    """Yield (name, flat inner meta re-rooted under meta.path, rel path,
+    param subtree) per inner tap, in deterministic order."""
+    for iname in sorted(inner_metas):
+        im = inner_metas[iname]
+        rel = im.path[1:]
+        imf = dataclasses.replace(im, path=meta.path + rel, scanned=0,
+                                  shared=False)
+        yield iname, imf, rel, get_subtree(params_sub, rel)
+
+
+def attn_pe_grad(meta: LayerMeta, cap, dy, params_sub):
+    inner_metas, caps, dtaps = _attn_parts(meta, cap, dy, params_sub)
+    out: dict = {}
+    for iname, imf, rel, psub_i in _attn_each(meta, params_sub, inner_metas):
+        part = _apply_flat("pe_grad", imf, caps[iname], dtaps[iname],
+                           params_sub=psub_i, weights=None,
+                           norm_method="auto", conv_impl="fgc")
+        for k2, v2 in part.items():
+            out = set_subtree(out, rel + (k2,), v2)
+    return out
+
+
+def attn_norm_sq(meta: LayerMeta, cap, dy, params_sub, method: str = "auto"):
+    if method == "auto":
+        method = "ghost"
+    if method == "pe":
+        return _realized(_sumsq(attn_pe_grad(meta, cap, dy, params_sub)),
+                         meta, "pe")
+    inner_metas, caps, dtaps = _attn_parts(meta, cap, dy, params_sub)
+    n = jnp.zeros((cap["x"].shape[0],), F32)
+    for iname, imf, rel, psub_i in _attn_each(meta, params_sub, inner_metas):
+        n = n + _apply_flat("norm_sq", imf, caps[iname], dtaps[iname],
+                            params_sub=psub_i, weights=None,
+                            norm_method="auto", conv_impl="fgc")
+    return _realized(n, meta, "ghost")
+
+
+def attn_contrib(meta: LayerMeta, cap, dy, w, params_sub):
+    inner_metas, caps, dtaps = _attn_parts(meta, cap, dy, params_sub)
+    out: dict = {}
+    for iname, imf, rel, psub_i in _attn_each(meta, params_sub, inner_metas):
+        part = _apply_flat("contrib", imf, caps[iname], dtaps[iname],
+                           params_sub=psub_i, weights=w,
+                           norm_method="auto", conv_impl="fgc")
+        for k2, v2 in part.items():
+            out = set_subtree(out, rel + (k2,), v2)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Generic local-VJP kind (SSM scans, routers, anything else)
 
 
@@ -558,7 +652,8 @@ def _fold_into_seq(meta: LayerMeta, cap, dy):
 
 def apply_kind(op: str, meta: LayerMeta, cap, dy, *, params_sub=None,
                weights=None, norm_method: str = "auto", conv_impl: str = "fgc",
-               embed_method: str = "segsum", conv_norm: str = "pe"):
+               embed_method: str = "segsum", conv_norm: str = "pe",
+               attn_norm: str = "auto"):
     """Dispatch `op` in {"pe_grad","norm_sq","contrib"} over any kind,
     handling stacked (scanned) axes and shared parameters."""
     kind = meta.kind
@@ -572,7 +667,8 @@ def apply_kind(op: str, meta: LayerMeta, cap, dy, *, params_sub=None,
         return _apply_flat(op, _unscanned(meta), cap, dy,
                            params_sub=params_sub, weights=weights,
                            norm_method=norm_method, conv_impl=conv_impl,
-                           embed_method=embed_method, conv_norm=conv_norm)
+                           embed_method=embed_method, conv_norm=conv_norm,
+                           attn_norm=attn_norm)
 
     if meta.shared and meta.scanned and op == "norm_sq":
         # Generic shared fallback: materialize the summed per-example grad
@@ -588,7 +684,8 @@ def apply_kind(op: str, meta: LayerMeta, cap, dy, *, params_sub=None,
         res = _apply_flat(op, _unscanned(meta), cap_f, dy_f,
                           params_sub=params_sub, weights=weights,
                           norm_method=norm_method, conv_impl=conv_impl,
-                          embed_method=embed_method, conv_norm=conv_norm)
+                          embed_method=embed_method, conv_norm=conv_norm,
+                          attn_norm=attn_norm)
         if op == "norm_sq":
             return res
         if op == "contrib":
@@ -617,7 +714,7 @@ def apply_kind(op: str, meta: LayerMeta, cap, dy, *, params_sub=None,
                                weights=weights, norm_method=norm_method,
                                conv_impl=conv_impl,
                                embed_method=embed_method,
-                               conv_norm=conv_norm)
+                               conv_norm=conv_norm, attn_norm=attn_norm)
 
         # Sequential over the stacked axis: bounds peak memory to one
         # layer's worth (vmap would batch every layer's intermediates).
@@ -641,14 +738,14 @@ def apply_kind(op: str, meta: LayerMeta, cap, dy, *, params_sub=None,
     return _apply_flat(op, meta, cap, dy, params_sub=params_sub,
                        weights=weights, norm_method=norm_method,
                        conv_impl=conv_impl, embed_method=embed_method,
-                       conv_norm=conv_norm)
+                       conv_norm=conv_norm, attn_norm=attn_norm)
 
 
 def apply_norm_contrib(meta: LayerMeta, cap, dy, *, weights,
                        params_sub=None, fused: bool = True,
                        conv_impl: str = "fgc", norm_method: str = "auto",
                        embed_method: str = "segsum",
-                       conv_norm: str = "auto"):
+                       conv_norm: str = "auto", attn_norm: str = "auto"):
     """Per-example squared norms *and* the weighted sum Σ_b w_b·g_b from
     one pass over the captures.  Valid whenever the weights are known
     entering the pass (stale-coefficient clipping).
@@ -683,7 +780,8 @@ def apply_norm_contrib(meta: LayerMeta, cap, dy, *, weights,
         return conv_norm_and_contrib(meta, cap, dy, weights, use_pallas=True)
     n = apply_kind("norm_sq", meta, cap, dy, params_sub=params_sub,
                    norm_method=norm_method, conv_impl=conv_impl,
-                   embed_method=embed_method, conv_norm=conv_norm)
+                   embed_method=embed_method, conv_norm=conv_norm,
+                   attn_norm=attn_norm)
     c = apply_kind("contrib", meta, cap, dy, params_sub=params_sub,
                    weights=weights, conv_impl=conv_impl)
     return n, c
@@ -695,7 +793,8 @@ def _unscanned(meta: LayerMeta) -> LayerMeta:
 
 
 def _apply_flat(op, meta, cap, dy, *, params_sub, weights, norm_method,
-                conv_impl, embed_method="segsum", conv_norm="pe"):
+                conv_impl, embed_method="segsum", conv_norm="pe",
+                attn_norm="auto"):
     kind = meta.kind
     if kind == "dense" and not meta.segmented:
         if op == "pe_grad":
@@ -738,6 +837,12 @@ def _apply_flat(op, meta, cap, dy, *, params_sub, weights, norm_method,
         if op == "norm_sq":
             return local_vjp_norm_sq(meta, cap, dy, params_sub)
         return local_vjp_contrib(meta, cap, dy, weights, params_sub)
+    if kind == "attn":
+        if op == "pe_grad":
+            return attn_pe_grad(meta, cap, dy, params_sub)
+        if op == "norm_sq":
+            return attn_norm_sq(meta, cap, dy, params_sub, method=attn_norm)
+        return attn_contrib(meta, cap, dy, weights, params_sub)
     raise ValueError(f"unknown kind {kind}")
 
 

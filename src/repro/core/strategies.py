@@ -150,7 +150,8 @@ def group_norms_from_captures(params, caps, dtaps, metas, *,
                               norm_method: str = "auto",
                               conv_impl: str = "fgc",
                               embed_method: str = "segsum",
-                              conv_norm: str = "auto"):
+                              conv_norm: str = "auto",
+                              attn_norm: str = "auto"):
     """Per-parameter-group per-example squared grad norms, grouping taps
     that touch the same parameter (tied embeddings, shared blocks).
 
@@ -179,7 +180,8 @@ def group_norms_from_captures(params, caps, dtaps, metas, *,
             norms.append(_tagged(kinds.apply_kind(
                 "norm_sq", metas[n], caps[n], dtaps[n], params_sub=psub,
                 norm_method=norm_method, conv_impl=conv_impl,
-                embed_method=embed_method, conv_norm=conv_norm), path))
+                embed_method=embed_method, conv_norm=conv_norm,
+                attn_norm=attn_norm), path))
             continue
         ks = sorted((metas[n].kind, metas[n].w_transposed) for n in names)
         if ks == [("dense", True), ("embed", False)] and len(names) == 2:
@@ -275,7 +277,7 @@ def clipped_grad_sum_detailed(apply_fn, params, batch, *, l2_clip: float,
                               conv_norm: str | None = None, overrides=None,
                               mem_budget: int | None = None, plan=None,
                               clip_policy=None, budgets=None,
-                              prev_norms_sq=None):
+                              prev_norms_sq=None, attn_norm: str = "auto"):
     """Returns (per-example losses, Σ_b clip(g_b), per-example norms²,
     detail).
 
@@ -340,7 +342,7 @@ def clipped_grad_sum_detailed(apply_fn, params, batch, *, l2_clip: float,
     group_keys, group_ns = group_norms_from_captures(
         params, caps, dtaps, metas, norm_method=norm_method,
         conv_impl=conv_impl, embed_method=embed_method,
-        conv_norm=conv_norm or "auto")
+        conv_norm=conv_norm or "auto", attn_norm=attn_norm)
     norms_sq = jnp.sum(group_ns, axis=0)
 
     if mode == "per_layer":
@@ -417,6 +419,8 @@ def _norm_kwargs(lp):
         return {"embed_method": lp.norm_method}
     if lp.kind == "conv":
         return {"conv_norm": lp.norm_method}
+    if lp.kind == "attn":
+        return {"attn_norm": lp.norm_method}
     return {}
 
 

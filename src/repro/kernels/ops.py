@@ -144,13 +144,19 @@ def pe_conv_grad(x, dy, *, kernel_spatial, stride=1, dilation=1, padding=0,
 
 def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
                     bk: int = 512):
+    """Differentiable flash dispatch: the Pallas kernel (custom_vjp
+    blockwise backward) on TPU, the interpreter for small CPU shapes,
+    and the chunked-XLA reference beyond that — autodiff through the
+    chunk loop keeps the backward's score working set one query chunk
+    wide, matching the kernel's memory contract."""
     if on_tpu():
         return _fa.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
                                    interpret=False)
     # CPU: the interpreter is correct but slow; keep it for small shapes,
-    # use the reference beyond that.
+    # use the chunked reference beyond that.
     if q.shape[1] * k.shape[1] <= 1 << 20:
         return _fa.flash_attention(q, k, v, causal=causal,
                                    bq=min(bq, q.shape[1]),
                                    bk=min(bk, k.shape[1]), interpret=True)
-    return _ref.flash_attention_ref(q, k, v, causal=causal)
+    return _ref.flash_attention_chunked_ref(q, k, v, causal=causal,
+                                            chunk=bq)

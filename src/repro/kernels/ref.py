@@ -82,3 +82,39 @@ def flash_attention_ref(q, k, v, *, causal: bool = True):
         s = jnp.where(mask[None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhts,bshd->bthd", p.astype(v.dtype), vr)
+
+
+def flash_attention_chunked_ref(q, k, v, *, causal: bool = True,
+                                chunk: int = 512):
+    """Chunked-XLA flash oracle: the (T, S) score matrix exists one query
+    chunk at a time, never whole, and autodiff through the chunk loop
+    gives the same memory shape backward — the CPU/interpret dispatch
+    target for long sequences where ``flash_attention_ref`` would
+    materialize T²·H scores (and its backward twice that)."""
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    rep = H // k.shape[2]
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    chunk = min(chunk, T)
+    pad = -T % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    ks = jnp.arange(S)
+
+    def one(args):
+        qc, t0 = args                     # (B,chunk,H,hd), scalar start
+        s = jnp.einsum("bthd,bshd->bhts", qc, kr,
+                       preferred_element_type=jnp.float32) * hd ** -0.5
+        if causal:
+            qi = t0 + jnp.arange(chunk)
+            s = jnp.where((ks[None, :] <= qi[:, None])[None, None],
+                          s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhts,bshd->bthd", p.astype(v.dtype), vr)
+
+    n = (T + pad) // chunk
+    qs = q.reshape(B, n, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    out = jax.lax.map(one, (qs, jnp.arange(n) * chunk))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, T + pad, H, hd)
+    return out[:, :T] if pad else out

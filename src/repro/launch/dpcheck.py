@@ -46,8 +46,11 @@ from repro.models.registry import build_model
 
 def _build_engine(arch: str, clip_mode: str, mesh_spec, *,
                   batch: int, seq: int, noise: float, clip: float,
-                  run_seed: int, strategy: str) -> PrivacyEngine:
+                  run_seed: int, strategy: str,
+                  dp_attn: bool = False) -> PrivacyEngine:
     cfg = get_config(arch).reduced()
+    if dp_attn:
+        cfg = cfg.replace(dp_attn=True)
     model = build_model(cfg)
     if clip_mode != "flat" and strategy not in ("auto", "bk"):
         strategy = "auto"
@@ -82,6 +85,10 @@ def main(argv=None):
     ap.add_argument("--clip", type=float, default=1.0)
     ap.add_argument("--noise", type=float, default=0.8)
     ap.add_argument("--run-seed", type=int, default=0)
+    ap.add_argument("--dp-attn", action="store_true",
+                    help="enable the block-level attention realization "
+                         "(dp_attn=True) so attention lanes exercise the "
+                         "attn ghost-norm path")
     ap.add_argument("--strategy", default="auto",
                     help="per-example gradient strategy; 'auto' (default) "
                          "exercises the planner so the plan/graph "
@@ -99,13 +106,16 @@ def main(argv=None):
     failed = []
     for arch, mode, spec in lanes:
         name = f"{arch} clip={mode} mesh={spec}"
+        if args.dp_attn:
+            name += " dp_attn"
         # Lanes re-plan per topology; don't let a cached single-device
         # plan leak into a mesh lane or vice versa.
         costmodel.clear_plan_cache()
         engine = _build_engine(arch, mode, spec, batch=args.batch,
                                seq=args.seq, noise=args.noise,
                                clip=args.clip, run_seed=args.run_seed,
-                               strategy=args.strategy)
+                               strategy=args.strategy,
+                               dp_attn=args.dp_attn)
         report = engine.verify(coll_bytes_warn=args.coll_bytes_warn)
         bad = bool(report.errors) or (args.fail_on_warn
                                       and bool(report.warnings))

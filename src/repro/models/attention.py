@@ -11,13 +11,19 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.tapper import Tapper
+from repro.core.tapper import LayerMeta, Tapper
 from repro.launch.sharding import shard_act
 from repro.models import common as cm
 
 NEG = -1e30
 CHUNK_Q = 1024
 AUTO_CHUNK_FROM = 8192
+
+
+class FlashUnsupportedError(NotImplementedError):
+    """``impl="flash"`` was requested for a feature combination the flash
+    kernel does not implement (sliding window, cache offsets, valid-length
+    masking).  Named so dispatch callers can catch it and fall back."""
 
 
 # ---------------------------------------------------------------------------
@@ -44,13 +50,20 @@ def _causal_mask(T, S, offset=0, window=0):
     return m[None, None]
 
 
-def sdpa_chunked(q, k, v, *, offset=0, window=0, chunk=CHUNK_Q):
+def sdpa_chunked(q, k, v, *, offset=0, window=0, chunk=CHUNK_Q,
+                 valid_len=None):
     """Causal attention scanned over query chunks — bounds the (T,S) score
-    tensor to (chunk, S).  jnp reference of the flash kernel."""
+    tensor to (chunk, S).  jnp reference of the flash kernel.
+
+    valid_len masks raw key slots >= valid_len (cache semantics, same as
+    the xla path in :func:`attend`)."""
     B, T, H, hd = q.shape
     S = k.shape[1]
+    if T % chunk:
+        raise ValueError(
+            f"sdpa_chunked: query length {T} not divisible by chunk "
+            f"{chunk}; pass chunk=min(chunk, T) or pad the sequence")
     n = T // chunk
-    assert T % chunk == 0, (T, chunk)
     qs = jnp.moveaxis(q.reshape(B, n, chunk, H, hd), 1, 0)
 
     def body(_, qc_i):
@@ -61,6 +74,11 @@ def sdpa_chunked(q, k, v, *, offset=0, window=0, chunk=CHUNK_Q):
         m = s <= t
         if window:
             m = m & (s > t - window)
+        if valid_len is not None:
+            sl = jnp.arange(S)[None, :]
+            m = m & (sl < valid_len)
+            if window:
+                m = m & (sl >= valid_len - window)
         return None, _sdpa(qc, k, v, m[None, None])
 
     _, out = lax.scan(body, None, (qs, jnp.arange(n)))
@@ -76,7 +94,17 @@ def attend(q, k, v, *, causal=True, offset=0, window=0, impl="auto",
         impl = "chunked" if (T >= AUTO_CHUNK_FROM and causal and
                              valid_len is None and T % CHUNK_Q == 0) else "xla"
     if impl == "chunked":
-        return sdpa_chunked(q, k, v, offset=offset, window=window)
+        return sdpa_chunked(q, k, v, offset=offset, window=window,
+                            valid_len=valid_len, chunk=min(CHUNK_Q, T))
+    if impl == "flash":
+        if window or offset or valid_len is not None:
+            raise FlashUnsupportedError(
+                f"impl='flash' supports plain causal/full attention only "
+                f"(got window={window}, offset={offset}, "
+                f"valid_len={'set' if valid_len is not None else None}); "
+                f"use impl='chunked' or 'xla'")
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal)
     if causal and T > 1:
         mask = _causal_mask(T, S, offset=offset, window=window)
     else:
@@ -127,12 +155,42 @@ def gqa_init(key, d_model, n_heads, n_kv, head_dim, *, qk_norm=False,
 def gqa_apply(tp: Tapper, name: str, p, x, *, n_heads, n_kv, head_dim,
               rope_theta=1e4, qk_norm=False, positions=None, causal=True,
               window=0, cache=None, x_kv=None, attn_impl="auto",
-              use_rope=True):
+              use_rope=True, dp_attn=False):
     """Returns (attn_out, new_cache).  cache: {"k","v","pos"} or None.
 
     x_kv: source sequence for cross attention (no cache, no causal mask,
     no rope on either side unless positions given).
+
+    dp_attn: tap the whole block as one ``"attn"`` layer (see kinds.py) —
+    per-example norms for wq/wk/wv/wo come from a layer-local recompute
+    instead of per-projection captures, so the planner can price the
+    block's ghost norm as a unit.  Falls back to per-projection taps for
+    serving (cache), cross-attention, windowed, shared ("~") and
+    explicit-positions call sites.
     """
+    if (dp_attn and tp.active() and cache is None and x_kv is None
+            and not window and positions is None
+            and not name.startswith("~")):
+        kw = dict(n_heads=n_heads, n_kv=n_kv, head_dim=head_dim,
+                  rope_theta=rope_theta, qk_norm=qk_norm, causal=causal,
+                  attn_impl=attn_impl, use_rope=use_rope)
+
+        def rebuild(inner_tp, psub, xin):
+            y, _ = gqa_apply(inner_tp, "blk", psub, xin, **kw)
+            return y
+
+        y = rebuild(Tapper(), p, x)
+        D = x.shape[-1]
+        meta = LayerMeta(
+            "attn", tuple(name.split("/")),
+            static={"proj_dims": ((D, n_heads * head_dim),
+                                  (D, n_kv * head_dim),
+                                  (D, n_kv * head_dim),
+                                  (n_heads * head_dim, D)),
+                    "qk_flops": n_heads * head_dim},
+            fn=rebuild)
+        return tp.tap(name, y, {"x": x}, meta), None
+
     B, T, _ = x.shape
     q = tp.dense(f"{name}/wq", x, p["wq"]["w"], p["wq"].get("b"))
     src = x if x_kv is None else x_kv
@@ -228,11 +286,38 @@ def mla_init(key, d_model, n_heads, *, q_lora_rank, kv_lora_rank, qk_nope_dim,
 def mla_apply(tp: Tapper, name: str, p, x, *, n_heads, q_lora_rank,
               kv_lora_rank, qk_nope_dim, qk_rope_dim, v_head_dim,
               rope_theta=1e4, positions=None, cache=None, attn_impl="auto",
-              absorbed_decode: bool = False):
+              absorbed_decode: bool = False, dp_attn=False):
     """Returns (out, new_cache).  cache stores the *latent* kv:
-    {"ckv" (B,S,kvr), "krope" (B,S,dr), "pos"}."""
+    {"ckv" (B,S,kvr), "krope" (B,S,dr), "pos"}.
+
+    dp_attn: block-level "attn" tap (see gqa_apply) over the train path.
+    """
     B, T, D = x.shape
     qd = qk_nope_dim + qk_rope_dim
+
+    if (dp_attn and tp.active() and cache is None and positions is None
+            and not name.startswith("~")):
+        kw = dict(n_heads=n_heads, q_lora_rank=q_lora_rank,
+                  kv_lora_rank=kv_lora_rank, qk_nope_dim=qk_nope_dim,
+                  qk_rope_dim=qk_rope_dim, v_head_dim=v_head_dim,
+                  rope_theta=rope_theta, attn_impl=attn_impl)
+
+        def rebuild(inner_tp, psub, xin):
+            y, _ = mla_apply(inner_tp, "blk", psub, xin, **kw)
+            return y
+
+        y = rebuild(Tapper(), p, x)
+        q_dims = (((D, q_lora_rank), (q_lora_rank, n_heads * qd))
+                  if q_lora_rank else ((D, n_heads * qd),))
+        meta = LayerMeta(
+            "attn", tuple(name.split("/")),
+            static={"proj_dims": q_dims + (
+                        (D, kv_lora_rank + qk_rope_dim),
+                        (kv_lora_rank, n_heads * (qk_nope_dim + v_head_dim)),
+                        (n_heads * v_head_dim, D)),
+                    "qk_flops": n_heads * qd},
+            fn=rebuild)
+        return tp.tap(name, y, {"x": x}, meta), None
 
     if q_lora_rank:
         cq = tp.dense(f"{name}/wq_a", x, p["wq_a"]["w"])

@@ -127,7 +127,7 @@ class TransformerLM:
         c = self.cfg
         return dict(n_heads=c.n_heads, n_kv=c.n_kv, head_dim=c.hd,
                     rope_theta=c.rope_theta, qk_norm=c.qk_norm,
-                    attn_impl=c.attn_impl)
+                    attn_impl=c.attn_impl, dp_attn=c.dp_attn)
 
     def _head(self, tp, params, h):
         c = self.cfg
@@ -154,7 +154,8 @@ class TransformerLM:
                     n_heads=c.n_heads, q_lora_rank=c.q_lora_rank,
                     kv_lora_rank=c.kv_lora_rank, qk_nope_dim=c.qk_nope_dim,
                     qk_rope_dim=c.qk_rope_dim, v_head_dim=c.v_head_dim,
-                    rope_theta=c.rope_theta, attn_impl=c.attn_impl)
+                    rope_theta=c.rope_theta, attn_impl=c.attn_impl,
+                    dp_attn=c.dp_attn)
                 hh = hh + a
                 x2 = cm.apply_norm(stp, "ln2", p_l.get("ln2"), hh, c.norm)
                 if c.n_experts:

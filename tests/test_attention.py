@@ -131,6 +131,157 @@ def test_moe_einsum_vs_gather():
     np.testing.assert_allclose(np.asarray(lb1), np.asarray(lb2), rtol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# Flash kernel differential suite: Pallas flash (interpret mode) vs the
+# chunked-scan reference vs plain _sdpa, forward and backward.
+
+
+def _qkv(seed, B, T, H, hd, S=None, Hkv=None, dtype=jnp.float32):
+    rng = np.random.RandomState(seed)
+    S = T if S is None else S
+    Hkv = H if Hkv is None else Hkv
+    q = jnp.array(rng.randn(B, T, H, hd), dtype)
+    k = jnp.array(rng.randn(B, S, Hkv, hd), dtype)
+    v = jnp.array(rng.randn(B, S, Hkv, hd), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("kv_heads", [4, 2, 1])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_sdpa_gqa(kv_heads, causal):
+    """Flash kernel (GQA folded inside the kernel) == repeat_kv + _sdpa
+    == sdpa_chunked, across grouped-query rep factors 1/2/4."""
+    from repro.kernels import flash_attn as fa
+    B, T, H, hd = 2, 64, 4, 8
+    q, k, v = _qkv(10 + kv_heads, B, T, H, hd, Hkv=kv_heads)
+    got = fa.flash_attention(q, k, v, causal=causal, bq=16, bk=16,
+                             interpret=True)
+    kr, vr = attn.repeat_kv(k, H // kv_heads), attn.repeat_kv(v, H // kv_heads)
+    mask = (attn._causal_mask(T, T) if causal
+            else jnp.ones((1, 1, T, T), bool))
+    want = attn._sdpa(q, kr, vr, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+    if causal:
+        chunked = attn.sdpa_chunked(q, kr, vr, chunk=16)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(chunked),
+                                   rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("bq,bk", [(8, 32), (32, 8)])
+def test_flash_rectangular_blocks(bq, bk):
+    """bq != bk block shapes traverse the same masked tiles."""
+    from repro.kernels import flash_attn as fa
+    q, k, v = _qkv(20, 2, 64, 2, 8, Hkv=1)
+    got = fa.flash_attention(q, k, v, causal=True, bq=bq, bk=bk,
+                             interpret=True)
+    kr, vr = attn.repeat_kv(k, 2), attn.repeat_kv(v, 2)
+    want = attn._sdpa(q, kr, vr, attn._causal_mask(64, 64))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_backward_matches_reference(causal):
+    """custom_vjp blockwise backward == autodiff through _sdpa, for q, k
+    and v grads, including the GQA head-fold in dk/dv."""
+    from repro.kernels import flash_attn as fa
+    B, T, H, hd = 2, 32, 4, 8
+    q, k, v = _qkv(30, B, T, H, hd, Hkv=2)
+    rng = np.random.RandomState(31)
+    w = jnp.array(rng.randn(B, T, H, hd), jnp.float32)
+
+    def f_flash(q, k, v):
+        return jnp.sum(w * fa.flash_attention(q, k, v, causal=causal,
+                                              bq=8, bk=8, interpret=True))
+
+    def f_ref(q, k, v):
+        kr, vr = attn.repeat_kv(k, 2), attn.repeat_kv(v, 2)
+        mask = (attn._causal_mask(T, T) if causal
+                else jnp.ones((1, 1, T, T), bool))
+        return jnp.sum(w * attn._sdpa(q, kr, vr, mask))
+
+    got = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   rtol=3e-4, atol=3e-5)
+
+
+def test_flash_query_pad_and_key_raise():
+    """T % bq != 0 is zero-padded and sliced back; S % bk != 0 raises the
+    named shape error (key padding would corrupt the normalizer)."""
+    from repro.kernels import flash_attn as fa
+    q, k, v = _qkv(40, 1, 40, 2, 8)
+    got = fa.flash_attention(q, k, v, causal=True, bq=16, bk=8,
+                             interpret=True)
+    want = attn._sdpa(q, k, v, attn._causal_mask(40, 40))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+    with pytest.raises(fa.FlashShapeError):
+        fa.flash_attention(q, k, v, causal=True, bq=16, bk=16,
+                           interpret=True)
+    with pytest.raises(fa.FlashShapeError):
+        fa.flash_attention(q, k[:, :, :0], v[:, :, :0], causal=True,
+                           bq=16, bk=8, interpret=True)
+
+
+# -- attend() dispatch regressions (fixed paths) ----------------------------
+
+
+def test_attend_flash_reachable_and_differentiable():
+    """impl='flash' actually dispatches to the kernel path (not a silent
+    xla fallback) and matches it; grads flow."""
+    q, k, v = _qkv(50, 2, 32, 2, 8)
+    got = attn.attend(q, k, v, causal=True, impl="flash")
+    want = attn.attend(q, k, v, causal=True, impl="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+    g = jax.grad(lambda q: jnp.sum(
+        attn.attend(q, k, v, causal=True, impl="flash") ** 2))(q)
+    assert bool(jnp.all(jnp.isfinite(g))) and float(jnp.abs(g).max()) > 0
+
+
+def test_attend_flash_unsupported_raises_named():
+    """window / offset / valid_len under impl='flash' raise the named
+    error (catchable as NotImplementedError), never silently mis-mask."""
+    q, k, v = _qkv(51, 1, 16, 2, 8)
+    for kw in ({"window": 4}, {"offset": 3}, {"valid_len": jnp.array(9)}):
+        with pytest.raises(attn.FlashUnsupportedError):
+            attn.attend(q, k, v, causal=True, impl="flash", **kw)
+    assert issubclass(attn.FlashUnsupportedError, NotImplementedError)
+
+
+def test_attend_chunked_threads_valid_len():
+    """Regression: impl='chunked' honours valid_len (cache semantics) the
+    same way the xla path does, with and without a window."""
+    q, k, v = _qkv(52, 2, 16, 2, 8, S=24)
+    vl = jnp.array(20)
+    for kw in ({}, {"window": 6}):
+        want = attn.attend(q, k, v, causal=True, impl="xla",
+                           valid_len=vl, **kw)
+        got = attn.attend(q, k, v, causal=True, impl="chunked",
+                          valid_len=vl, **kw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_attend_chunked_clamps_chunk_to_seq():
+    """Regression: short sequences no longer crash the chunked path —
+    attend() clamps the chunk to T before dispatching."""
+    q, k, v = _qkv(53, 2, 8, 2, 8)
+    got = attn.attend(q, k, v, causal=True, impl="chunked")
+    want = attn.attend(q, k, v, causal=True, impl="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_sdpa_chunked_indivisible_raises():
+    q, k, v = _qkv(54, 1, 10, 2, 8)
+    with pytest.raises(ValueError, match="not divisible"):
+        attn.sdpa_chunked(q, k, v, chunk=4)
+
+
 def test_moe_lb_per_example_isolation():
     """Changing example j must not change example i's load-balance loss."""
     from repro.models.moe import moe_apply, moe_init

@@ -535,3 +535,64 @@ def test_sharded_2d_private_step_matches_single_device(arch):
     report = e2.verify()
     assert not report.errors, report.errors
     assert "partitioned over model" in report.checked["sharding"]
+
+
+@pytest.mark.multidevice
+@needs_8_devices
+def test_sharded_2d_custom_optimizer_state_inherits_param_layout():
+    """Regression: a custom optimizer callable's state used to stay
+    replicated on a tensor-sharded mesh (the sharding table only knew
+    adamw/sgdm by name), silently forfeiting the ZeRO-style moment
+    partitioning.  The engine now derives the layout from the recorded
+    state pytree — moment-like leaves (shaped like a param whose layout
+    is unambiguous) inherit the param sharding, scalars stay replicated
+    — and the step still matches the single-device reference."""
+    from repro.configs import get_config
+    from repro.launch.sharding import param_sharding
+    from repro.launch.train import make_batch_fn
+    from repro.models.registry import build_model
+
+    def momentum(grad, opt, params, *, lr, weight_decay):
+        mom = jax.tree.map(lambda m, g: 0.9 * m + g, opt["mom"], grad)
+        new = jax.tree.map(lambda p, m: p - lr * m, params, mom)
+        return new, {"mom": mom, "step": opt["step"] + 1}
+
+    cfg = get_config("llama3.2-1b").reduced()
+    model = build_model(cfg)
+    batch_fn = make_batch_fn(cfg, 8, 32)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    dp = DPConfig(l2_clip=1.0, noise_multiplier=0.8)
+
+    def opt0():
+        return {"mom": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    costmodel.clear_plan_cache()
+    e1 = PrivacyEngine(model.apply, params, batch_fn(0), dp=dp,
+                       optimizer=momentum, lr=1e-2, run_seed=7,
+                       calibration="analytic")
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    costmodel.clear_plan_cache()
+    e2 = PrivacyEngine(model.apply, params, batch_fn(0), dp=dp,
+                       optimizer=momentum, lr=1e-2, mesh=mesh,
+                       param_axes=axes, run_seed=7, calibration="analytic")
+    p1, o1 = params, opt0()
+    p2, o2 = params, opt0()
+    for step in range(2):
+        p1, o1, l1, _ = e1.private_step(p1, o1, batch_fn(step), step=step)
+        p2, o2, l2, _ = e2.private_step(p2, o2, batch_fn(step), step=step)
+        assert abs(float(l1) - float(l2)) < 1e-5
+    assert tree_maxdiff(p1, p2) < 1e-6
+    assert tree_maxdiff(o1["mom"], o2["mom"]) < 1e-6
+    # the regression: moment leaves are actually partitioned now
+    assert any(not leaf.sharding.is_fully_replicated
+               for leaf in jax.tree.leaves(o2["mom"])), \
+        "custom optimizer moments stayed replicated"
+    # ... and mirror the param layout wherever it is unambiguous
+    in_sh, _ = e2._step_shardings()
+    psh = param_sharding(axes, mesh, shapes_tree=e2._params_spec)
+    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    for got, want in zip(jax.tree.leaves(in_sh[1]["mom"]),
+                         jax.tree.leaves(psh)):
+        assert got == want or got == repl
+    assert in_sh[1]["step"] == repl
